@@ -1,0 +1,33 @@
+"""Paper Fig. 10 analogue: purchase and running cost per Mups.
+
+The paper compares USD/Mups (hardware price) and Watt/Mups across CPU
+tiers and GPUs (July-2012 prices).  Here the same economics are computed
+for the measured host tiers and the projected TPU v5e, using public
+figures: v5e list price ~USD 4,700/chip equivalent (on-demand
+$1.20/chip-hour amortised over 3 years gives a similar order) and ~215 W
+board power per chip.  These are order-of-magnitude inputs -- the
+paper's own numbers were equally ad hoc (their sec. 5 caveats apply
+verbatim).
+"""
+from __future__ import annotations
+
+from benchmarks.bench_fig9 import projected_v5e_mups
+from benchmarks.bench_table1 import run as table1_run
+
+HOST_PRICE_USD = 2000.0     # generic server-class host for the CPU tiers
+HOST_POWER_W = 150.0
+V5E_PRICE_USD = 4700.0
+V5E_POWER_W = 215.0
+
+
+def main():
+    rows = table1_run()
+    print("impl,usd_per_mups,watt_per_mups")
+    for name, v in rows.items():
+        print(f"{name},{HOST_PRICE_USD / v:.2f},{HOST_POWER_W / v:.3f}")
+    v5e = projected_v5e_mups()
+    print(f"v5e-projection,{V5E_PRICE_USD / v5e:.4f},{V5E_POWER_W / v5e:.5f}")
+
+
+if __name__ == "__main__":
+    main()

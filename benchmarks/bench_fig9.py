@@ -1,0 +1,47 @@
+"""Paper Fig. 9 analogue: acceleration of each parallelization tier over
+the sequential(-analogue) baseline, plus the projected TPU-v5e speedup
+from the dry-run roofline (the "GPU bar" of the original figure).
+
+The paper's headline numbers for comparison: SSE/AVX ~3x over scalar,
+threads+SIMD 12-18x, GPU up to ~50x over scalar (but <10x over the best
+CPU code) -- the point being that fine-grained parallelism is mandatory
+before cross-device comparisons mean anything.  The same structure
+reproduces here: boolean/bit-plane vectorisation gives the intra-chip
+speedup, and the v5e projection stands in for the accelerator bar.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.bench_table1 import run as table1_run
+
+# v5e memory-roofline projection: FHP is memory-bound (paper sec. 4);
+# the fused bit-plane step moves 8 planes x 4 B / 32 sites, read + write.
+BYTES_PER_SITE_FUSED = 2 * 8 * 4 / 32.0
+HBM_BW = 819e9
+
+
+def projected_v5e_mups() -> float:
+    return HBM_BW / BYTES_PER_SITE_FUSED / 1e6
+
+
+def main():
+    rows = table1_run()
+    base = rows["byte-LUT (seq analogue)"]
+    print("impl,speedup_vs_seq")
+    for name, v in rows.items():
+        print(f"{name},{v / base:.2f}")
+    v5e = projected_v5e_mups()
+    print(f"v5e-projection (1 chip; memory roofline),{v5e / base:.1f}")
+    # per-256-chip pod with the measured dry-run halo overhead
+    dd = "results/dryrun/fhp-lattice__fhp__sp.json"
+    if os.path.exists(dd):
+        rec = json.load(open(dd))
+        eff = rec.get("useful_bytes_ratio", 1.0)
+        print(f"v5e-pod-projection (256 chips, halo-adjusted),"
+              f"{256 * v5e * min(eff, 1.0) / base:.0f}")
+
+
+if __name__ == "__main__":
+    main()

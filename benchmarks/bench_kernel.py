@@ -1,0 +1,47 @@
+"""Kernel-level microbenchmark: per-step cost of the fused FHP update as a
+function of block height and RNG placement, plus the VMEM footprint the
+BlockSpec tiling claims.  Wall-clock here is the *oracle* path (interpret
+Pallas measures Python); the structural numbers (VMEM bytes, HBM traffic
+per site) are the TPU-relevant output.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane, byte_step
+from repro.kernels.fhp_step.ops import pick_block_rows, vmem_bytes
+
+H, W = 1024, 4096
+WD = W // 32
+
+
+def main():
+    planes = bitplane.pack(jnp.asarray(
+        byte_step.make_channel(H, W, density=0.3, seed=0)))
+
+    @jax.jit
+    def oracle(p):
+        return bitplane.run_planes(p, 5, p_force=0.01)
+
+    oracle(planes).block_until_ready()
+    t0 = time.perf_counter()
+    oracle(planes).block_until_ready()
+    dt = time.perf_counter() - t0
+    print("metric,value,unit")
+    print(f"oracle_step,{dt / 5 * 1e3:.2f},ms")
+    print(f"oracle_mups,{H * W * 5 / dt / 1e6:.1f},Mups")
+
+    for wd in (128, 512, 2048, WD):
+        bh = pick_block_rows(H, wd)
+        print(f"block_rows(wd={wd}),{bh},rows")
+        print(f"vmem_bytes(wd={wd}),{vmem_bytes(bh, wd)},B")
+    # HBM traffic of the fused kernel: one read + one write of 8 planes
+    print(f"hbm_bytes_per_site,{2 * 8 * 4 / 32.0},B")
+    print(f"hbm_bytes_per_site_unfused,{2 * 2 * 8 * 4 / 32.0},B")
+
+
+if __name__ == "__main__":
+    main()

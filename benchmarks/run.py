@@ -1,0 +1,26 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Table 1  -> bench_table1 (Mups per implementation tier)
+Fig. 9   -> bench_fig9   (speedup over sequential analogue + v5e projection)
+Fig. 10  -> bench_fig10  (USD/Mups, Watt/Mups)
+kernel   -> bench_kernel (fused-kernel structure: blocks, VMEM, B/site)
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import bench_fig9, bench_fig10, bench_kernel, bench_table1
+    for name, mod in [("table1", bench_table1), ("fig9", bench_fig9),
+                      ("fig10", bench_fig10), ("kernel", bench_kernel)]:
+        print(f"== {name} ==")
+        t0 = time.time()
+        mod.main()
+        print(f"-- {name} done in {time.time() - t0:.1f}s --\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Flow past a cylinder: the classic FHP demonstration (the paper's
+motivation for arbitrary 2-D geometries, sec. 2).
+
+A solid disk sits in a driven channel; after spin-up the wake behind the
+disk has a velocity deficit and the flow accelerates around the sides
+(continuity).  Run with the fused kernel path.
+
+    PYTHONPATH=src python examples/cylinder.py [--steps 1500]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import bitplane, byte_step  # noqa: E402
+from repro.kernels.fhp_step.ops import run_pallas  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--height", type=int, default=96)
+    ap.add_argument("--width", type=int, default=384)
+    ap.add_argument("--radius", type=int, default=10)
+    ap.add_argument("--p-force", type=float, default=0.03)
+    args = ap.parse_args()
+
+    h, w, r = args.height, args.width, args.radius
+    yy, xx = np.mgrid[0:h, 0:w]
+    cy, cx = h // 2, w // 4
+    disk = (yy - cy) ** 2 + (xx - cx) ** 2 <= r * r
+    state = byte_step.make_channel(h, w, density=0.22, seed=0, obstacle=disk)
+    planes = bitplane.pack(jnp.asarray(state))
+    m0 = int(bitplane.density_total(planes))
+
+    planes = run_pallas(planes, args.steps, p_force=args.p_force)
+    assert int(bitplane.density_total(planes)) == m0
+
+    out = bitplane.unpack(planes)
+    px2, _ = byte_step.momentum(out)
+    dens = byte_step.density(out)
+    ux = np.asarray(px2, np.float64) / 2.0
+    n = np.maximum(np.asarray(dens, np.float64), 1e-9)
+
+    def region_u(y0, y1, x0, x1):
+        return float(ux[y0:y1, x0:x1].sum() / n[y0:y1, x0:x1].sum())
+
+    upstream = region_u(cy - r, cy + r, cx - 6 * r, cx - 3 * r)
+    wake = region_u(cy - r, cy + r, cx + 2 * r, cx + 5 * r)
+    side = region_u(2, cy - 2 * r, cx - r, cx + r)
+
+    print(f"lattice {h}x{w}, disk r={r} at ({cy},{cx}), "
+          f"{args.steps} steps, mass conserved: True")
+    print(f"mean u_x upstream: {upstream:+.4f}")
+    print(f"mean u_x in wake : {wake:+.4f}  (deficit "
+          f"{(1 - wake / max(upstream, 1e-9)) * 100:.0f}%)")
+    print(f"mean u_x beside  : {side:+.4f}  (bypass acceleration "
+          f"{(side / max(upstream, 1e-9) - 1) * 100:+.0f}%)")
+    assert wake < upstream, "wake must show a velocity deficit"
+    assert side > wake, "flow must accelerate around the obstacle"
+    # interior of the disk stays empty (its perimeter transiently holds
+    # particles mid-bounce -- that's the no-slip mechanism itself)
+    interior = (yy - cy) ** 2 + (xx - cx) ** 2 <= (r - 2) ** 2
+    assert int(np.asarray(dens)[interior].sum()) == 0
+    print("OK: obstacle wake reproduced")
+
+
+if __name__ == "__main__":
+    main()

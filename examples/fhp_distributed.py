@@ -1,0 +1,53 @@
+"""Distributed FHP demo: the production domain decomposition running on 8
+fake host devices, verified bit-identical to the single-device stepper,
+with halo-widening depth sweep.
+
+    PYTHONPATH=src python examples/fhp_distributed.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys  # noqa: E402
+
+sys.path.insert(0, "src")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+
+from repro.core import bitplane, byte_step, distributed  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    H, W, steps = 128, 1024, 16
+    planes = bitplane.pack(jnp.asarray(
+        byte_step.make_channel(H, W, density=0.25, seed=0)))
+    sh = NamedSharding(mesh, distributed.lattice_spec(("pod", "data"),
+                                                      "model"))
+    pd = jax.device_put(planes, sh)
+    ref = bitplane.run_planes(planes, steps, p_force=0.02)
+
+    for depth in (1, 2, 4, 8):
+        run = jax.jit(distributed.make_run(
+            mesh, steps, y_axes=("pod", "data"), x_axis="model",
+            p_force=0.02, depth=depth))
+        out = run(pd, 0)
+        out.block_until_ready()
+        t0 = time.perf_counter()
+        out = run(pd, 0).block_until_ready()
+        dt = time.perf_counter() - t0
+        exact = bool((out == ref).all())
+        print(f"depth={depth}: bit-identical={exact}  "
+              f"({H * W * steps / dt / 1e6:.1f} Mups on 8 host devices; "
+              f"{steps // depth} halo exchanges)")
+        assert exact
+    print("OK: domain decomposition is bit-exact at every halo depth")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end training driver: train the repro-100m decoder LM on the
+synthetic Zipf stream with checkpointing, then resume once to prove the
+fault-tolerance path.
+
+    PYTHONPATH=src python examples/train_lm.py            # reduced (CPU-fast)
+    PYTHONPATH=src python examples/train_lm.py --full     # real 100M config
+"""
+import argparse
+import logging
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full 100M-param config (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--global-batch", type=int, default=8)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    from repro.configs import get_config, get_smoke
+    from repro.train import TrainConfig, Trainer
+
+    cfg = get_config("repro-100m") if args.full else get_smoke("repro-100m")
+    steps = args.steps or (300 if args.full else 60)
+    seq = args.seq_len or (512 if args.full else 128)
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        tcfg = TrainConfig(seq_len=seq, global_batch=args.global_batch,
+                           steps=steps, lr=3e-4, warmup=20,
+                           ckpt_dir=ckpt, ckpt_every=max(steps // 3, 10),
+                           log_every=10)
+        tr = Trainer(cfg, tcfg)
+        hist = tr.run()
+        print(f"loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f} "
+              f"over {steps} steps")
+        assert hist["loss"][-1] < hist["loss"][0]
+
+        # simulated restart: a fresh Trainer resumes from the checkpoint
+        tr2 = Trainer(cfg, tcfg)
+        print(f"resume check: restart would continue from step "
+              f"{tr2.start_step} (>{2 * steps // 3})")
+        assert tr2.start_step >= 2 * steps // 3
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Distributed FHP stepping: explicit domain decomposition over the mesh.
+
+This is the TPU analogue of the paper's two coarse-grained schemes:
+
+* PThreads row bands with two barriers per step (CPU)  ->  ``shard_map``
+  over the ``(pod, data)`` mesh axes in y and ``model`` in x, with halo
+  exchange via ``jax.lax.ppermute`` (pure nearest-neighbour ICI traffic,
+  the natural mapping onto the TPU torus);
+* CUDA overlapping blocks A/B/C (GPU)  ->  each shard *reads* an extended
+  rectangle (own block + halo) and *writes* its disjoint block, exactly the
+  paper's Fig. 7/8 ownership discipline, lifted from thread blocks to chips.
+
+Halo-widening (beyond-paper): exchanging a depth-``d`` halo allows ``d``
+local steps per exchange, trading a little redundant compute at the seams
+for 1/d of the exchange *count* (latency-bound at scale).  The validity
+region of the extended array shrinks by one row and one lattice column per
+local step, so ``d`` rows of y-halo and one 32-node word of x-halo support
+any ``d <= 31``.
+
+Counter-based RNG makes every scheme bit-identical to the single-device
+reference: shards hash *global* (row, word, t) coordinates (mod the global
+extent, so halo regions reproduce the owning shard's stream exactly).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import bitplane, prng
+
+Axes = Union[str, Tuple[str, ...]]
+
+
+def lattice_spec(y_axes: Axes = ("data",), x_axis: str = "model") -> P:
+    """PartitionSpec of a (8, H, Wd) plane stack: rows over y_axes, words
+    over x_axis, the 8 planes replicated (they live together per node)."""
+    return P(None, y_axes, x_axis)
+
+
+def _ring(n: int, up: bool):
+    return [(k, (k + 1) % n) for k in range(n)] if up else \
+           [(k, (k - 1) % n) for k in range(n)]
+
+
+def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
+                         x_axis: str = "model", p_force: float = 0.0,
+                         depth: int = 1, use_pallas: bool = False):
+    """Build ``step(planes, t) -> planes`` advancing ``depth`` global FHP
+    steps per halo exchange under ``shard_map``.
+
+    ``use_pallas`` runs the local update with the fused Pallas kernel
+    (depth 1 only: the kernel's in-kernel RNG uses linear counters, which
+    are exact for the interior cells a shard owns; depth > 1 needs correct
+    RNG in the halo region too, which the jnp path provides via modular
+    coordinate arrays).
+
+    The returned function is shard_map'ed but not jitted; callers compose it
+    (e.g. ``lax.fori_loop`` over exchanges) and jit the whole program.
+    """
+    assert 1 <= depth <= 31, "x halo is one 32-node word -> depth <= 31"
+    assert not (use_pallas and depth != 1), "pallas local step: depth == 1"
+    spec = lattice_spec(y_axes, x_axis)
+
+    def chunk(planes: jnp.ndarray, t) -> jnp.ndarray:
+        ny, nx = lax.axis_size(y_axes), lax.axis_size(x_axis)
+        iy, ix = lax.axis_index(y_axes), lax.axis_index(x_axis)
+        _, hl, wdl = planes.shape
+        d = depth
+
+        # x halo first (one word each side), then y halo on the x-extended
+        # array -- the corner words ride along with the y rows.
+        left = lax.ppermute(planes[..., -1:], x_axis, _ring(nx, up=True))
+        right = lax.ppermute(planes[..., :1], x_axis, _ring(nx, up=False))
+        ext = jnp.concatenate([left, planes, right], axis=-1)
+        top = lax.ppermute(ext[:, -d:, :], y_axes, _ring(ny, up=True))
+        bot = lax.ppermute(ext[:, :d, :], y_axes, _ring(ny, up=False))
+        ext = jnp.concatenate([top, ext, bot], axis=1)
+
+        if use_pallas:
+            from repro.kernels.fhp_step.ops import fhp_step_pallas
+            # Pad rows so a hardware-aligned band height divides; dummy
+            # rows only corrupt halo-row outputs, which are dropped.
+            he = ext.shape[1]
+            pad = (-he) % 8
+            if pad:
+                ext = jnp.pad(ext, ((0, 0), (0, pad), (0, 0)))
+            out = fhp_step_pallas(ext, t, p_force=p_force,
+                                  y0=iy * hl - 1, xw0=ix * wdl - 1,
+                                  block_rows=8)
+            return out[:, 1:1 + hl, 1:1 + wdl]
+
+        # Global coordinates (mod global extent) of every ext row/word: the
+        # RNG draws of halo cells must match the owning shard's draws.
+        rows = (jnp.arange(hl + 2 * d) + iy * hl - d) % (ny * hl)
+        cols = (jnp.arange(wdl + 2) + ix * wdl - 1) % (nx * wdl)
+        rows, cols = rows[:, None], cols[None, :]
+        row0 = iy * hl - d  # parity offset (global H is even; sign-safe)
+
+        def one(s, tt):
+            chi = prng.word_u32_at(rows, cols, tt, salt=0x11)
+            acc = (prng.bernoulli_words_at(rows, cols, tt, p_force)
+                   if p_force > 0 else None)
+            return bitplane.step_planes(s, tt, y0=row0, chi=chi, accel=acc)
+
+        if d == 1:
+            ext = one(ext, t)
+        else:
+            ext = lax.fori_loop(0, d, lambda j, s: one(s, t + j), ext)
+        return ext[:, d:d + hl, 1:1 + wdl]
+
+    # check_vma=False: pallas_call's out_shape carries no varying-mesh-axes
+    # metadata; correctness is established by the bit-exactness tests.
+    return jax.shard_map(chunk, mesh=mesh, in_specs=(spec, P()),
+                         out_specs=spec, check_vma=False)
+
+
+def make_run(mesh, steps: int, **kw):
+    """Jittable ``run(planes, t0)`` advancing ``steps`` global steps."""
+    depth = kw.get("depth", 1)
+    assert steps % depth == 0, (steps, depth)
+    stepper = make_sharded_stepper(mesh, **kw)
+
+    def run(planes, t0):
+        def body(i, s):
+            return stepper(s, t0 + i * depth)
+        return lax.fori_loop(0, steps // depth, body, planes)
+
+    return run
+
+
+def make_gspmd_run(mesh, steps: int, *, y_axes: Axes = ("data",),
+                   x_axis: str = "model", p_force: float = 0.0):
+    """Baseline distribution: the *global* stepper under jit + sharding
+    constraints; GSPMD materialises the halo traffic as collective-permutes
+    of the roll/shift edge slices.  Used as the §Perf baseline against the
+    explicit shard_map/ppermute scheme above."""
+    spec = lattice_spec(y_axes, x_axis)
+    sharding = NamedSharding(mesh, spec)
+
+    def run(planes, t0):
+        planes = lax.with_sharding_constraint(planes, sharding)
+
+        def body(i, s):
+            s = bitplane.step_planes(s, t0 + i, p_force=p_force)
+            return lax.with_sharding_constraint(s, sharding)
+
+        return lax.fori_loop(0, steps, body, planes)
+
+    return run

@@ -1,0 +1,1 @@
+from repro.kernels.fhp_step.ops import fhp_step_pallas, run_pallas  # noqa: F401

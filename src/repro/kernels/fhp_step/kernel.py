@@ -1,0 +1,216 @@
+"""Pallas TPU kernel: fused FHP stream + collide (+ force) on bit planes.
+
+This is the TPU-native translation of the paper's two hot loops:
+
+* the AVX "motion" kernel (Listing 1) -- here the x-component of streaming
+  is a lane-local bit shift with cross-word carry and the y-component is a
+  row selection from an overlapping halo block;
+* the LUT "scattering" pass -- here the branchless boolean collision algebra
+  generated from the same FHP-II rule table (see ``core/boolean.py``).
+
+The paper streams the whole lattice to memory twice per time step (motion
+pass + scattering pass).  Fusing both into one Pallas kernel halves HBM
+traffic -- the dominant cost of this memory-bound algorithm -- and is the
+main beyond-paper optimization recorded in EXPERIMENTS.md section Perf.
+
+Block decomposition (paper Figs. 7/8, adapted): the grid is 1-D over row
+bands of ``bh`` rows.  Each program reads its own band plus the bands above
+and below (the same array bound three times with shifted index maps -- the
+Pallas idiom for the paper's overlapping rectangles A/B/C), computes the
+update for the interior band, and writes a disjoint output band.  VMEM
+plays the role of the CUDA shared-memory apron C.
+
+The x direction is kept un-blocked (full row width per program): the
+periodic x wrap is then a lane rotate inside the block, and no x halo is
+needed.  Production lattices shard W over the ``model`` mesh axis first, so
+the per-device row width is small (W_loc / 32 words); ``ops.py`` checks the
+VMEM budget and refuses shapes that would not fit on a real v5e.
+
+RNG in-kernel: collision chirality and forcing bits are counter-based
+hashes of (row, word, t) -- recomputing them inside the kernel instead of
+streaming precomputed random planes from HBM saves up to 2 more plane
+reads per step (again: memory-bound, so this is a direct win).  Both modes
+are supported; they are bit-identical to ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import boolean, rules
+
+WORD = 32
+_U32 = jnp.uint32
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+_GOLD = 0x9E3779B9
+BERNOULLI_BITS = 16
+
+
+def _roll_x(p: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """Periodic word rotate along the last axis by +-1 (concat of slices --
+    lowers to lane shifts on TPU, no gather)."""
+    if shift == 1:
+        return jnp.concatenate([p[..., -1:], p[..., :-1]], axis=-1)
+    if shift == -1:
+        return jnp.concatenate([p[..., 1:], p[..., :1]], axis=-1)
+    return p
+
+
+def _shift_x(p: jnp.ndarray, dx: int) -> jnp.ndarray:
+    """Shift packed nodes by dx in x (periodic): bit shift + cross-word carry.
+
+    Position x of the result holds the bit of source position x - dx, i.e.
+    particles move *with* dx.  This is the 32-nodes-per-op primitive.
+    """
+    if dx == 0:
+        return p
+    if dx == 1:
+        return (p << 1) | (_roll_x(p, 1) >> (WORD - 1))
+    if dx == -1:
+        return (p >> 1) | (_roll_x(p, -1) << (WORD - 1))
+    raise ValueError(dx)
+
+
+def _hash_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer; bit-identical to ``core.prng.hash_u32``."""
+    x = x ^ (x >> 16)
+    x = x * _U32(_M1)
+    x = x ^ (x >> 13)
+    x = x * _U32(_M2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _word_u32(rows: jnp.ndarray, cols: jnp.ndarray, t: jnp.ndarray,
+              salt: int) -> jnp.ndarray:
+    """In-kernel replica of ``core.prng.word_u32`` on 2-D iota counters."""
+    ctr = rows * _U32(0x01000193) + cols
+    salted = _U32((salt * _M2) & 0xFFFFFFFF)
+    return _hash_u32(ctr ^ (t * _U32(_GOLD) + salted))
+
+
+def _bernoulli_words(rows, cols, t, pq: int, salt: int) -> jnp.ndarray:
+    """In-kernel replica of ``core.prng.bernoulli_words`` (MSB-first
+    comparator against the binary expansion of the quantised p)."""
+    shape = jnp.broadcast_shapes(rows.shape, cols.shape)
+    if pq <= 0:
+        return jnp.zeros(shape, dtype=_U32)
+    if pq >= (1 << BERNOULLI_BITS):
+        return jnp.full(shape, 0xFFFFFFFF, dtype=_U32)
+    res = jnp.zeros(shape, dtype=_U32)
+    eq = jnp.full(shape, 0xFFFFFFFF, dtype=_U32)
+    last = (pq & -pq).bit_length() - 1
+    for i in range(BERNOULLI_BITS - 1, last - 1, -1):
+        r = _word_u32(rows, cols, t, salt=salt * 0x100 + i)
+        if (pq >> i) & 1:
+            res = res | (eq & ~r)
+            eq = eq & r
+        else:
+            eq = eq & ~r
+    return res
+
+
+def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
+               bh: int, pq: int, rng_in_kernel: bool,
+               variant: str = "fhp2"):
+    """One fused FHP step for a band of ``bh`` rows.
+
+    Refs (inputs first, output last, per pallas_call convention): the
+    scalar block ``[t, y0, xw0]`` (step counter + global coordinates of
+    local element (0,0) -- traced, so the kernel composes with shard_map
+    where the offsets are axis-index dependent), the three overlapping
+    row-band views of the plane stack, then -- when ``rng_in_kernel`` is
+    False -- the precomputed chirality / force planes for the band, and
+    finally the output band.
+    """
+    out_ref = rest[-1]
+    extra_refs = rest[:-1]
+    i = pl.program_id(0)
+    wd = mid_ref.shape[-1]
+    y0 = s_ref[0, 1]
+    xw0 = s_ref[0, 2]
+
+    # Overlapping read: halo row above = last row of the upper band, halo
+    # row below = first row of the lower band (index maps wrap, so the
+    # global y wrap matches the jnp.roll reference exactly).
+    ext = jnp.concatenate(
+        [up_ref[:, bh - 1:bh, :], mid_ref[...], down_ref[:, 0:1, :]], axis=1)
+
+    # Absolute row index of ext row r is  y0 + i*bh - 1 + r  (the global H is
+    # even, so modular wrap never changes parity; -1 & 1 == parity(H-1)).
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (bh + 2, 1), 0)
+    rows_abs = y0 + i * bh - 1 + row_iota
+    even = (rows_abs % 2) == 0
+
+    # --- stream (paper's "motion", Listing 1) -------------------------------
+    streamed: List[jnp.ndarray] = []
+    for k in range(rules.N_DIR):
+        src = ext[k]
+        (dx0, dy), (dx1, _dy1) = rules.OFFSETS[k]
+        if dx0 == dx1:
+            moved = _shift_x(src, dx0)
+        else:
+            moved = jnp.where(even, _shift_x(src, dx0), _shift_x(src, dx1))
+        # Destination-centric: output row r (ext row r+1) receives from the
+        # source ext row r + 1 - dy; parity above was that of the source row.
+        streamed.append(moved[1 - dy:1 - dy + bh])
+    streamed.append(mid_ref[rules.REST_BIT])    # rest particles stay
+    streamed.append(mid_ref[rules.SOLID_BIT])   # geometry is static
+
+    # --- collide (paper's LUT scattering, as boolean algebra) ---------------
+    t = s_ref[0, 0].astype(_U32)
+    if rng_in_kernel:
+        rows_blk = y0.astype(_U32) + (i * bh + jax.lax.broadcasted_iota(
+            jnp.int32, (bh, 1), 0)).astype(_U32)
+        cols_blk = xw0.astype(_U32) + jax.lax.broadcasted_iota(
+            _U32, (1, wd), 1)
+        chi = _word_u32(rows_blk, cols_blk, t, salt=0x11)
+    else:
+        chi = extra_refs[0][...]
+    planes = boolean.collide_planes(streamed, chi, variant)
+
+    # --- force (momentum injection with probability p) ----------------------
+    if pq > 0:
+        if rng_in_kernel:
+            acc = _bernoulli_words(rows_blk, cols_blk, t, pq, salt=0x22)
+        else:
+            acc = extra_refs[-1][...]
+        planes = boolean.force_planes(planes, acc)
+
+    out_ref[...] = jnp.stack(planes)
+
+
+def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
+                  rng_in_kernel: bool, interpret: bool,
+                  variant: str = "fhp2"):
+    """Build the pallas_call for a (8, h, wd) plane stack."""
+    assert h % bh == 0, f"H={h} must be a multiple of block_rows={bh}"
+    nb = h // bh
+
+    band = lambda f: pl.BlockSpec((8, bh, wd), f)
+    in_specs = [
+        pl.BlockSpec((1, 3), lambda i: (0, 0)),            # [t, y0, xw0]
+        band(lambda i: (0, (i + nb - 1) % nb, 0)),         # upper halo band
+        band(lambda i: (0, i, 0)),                         # own band
+        band(lambda i: (0, (i + 1) % nb, 0)),              # lower halo band
+    ]
+    if not rng_in_kernel:
+        in_specs.append(pl.BlockSpec((bh, wd), lambda i: (i, 0)))   # chi
+        if pq > 0:
+            in_specs.append(pl.BlockSpec((bh, wd), lambda i: (i, 0)))  # accel
+
+    kern = functools.partial(fhp_kernel, bh=bh, pq=pq,
+                             rng_in_kernel=rng_in_kernel, variant=variant)
+    return pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((8, bh, wd), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, h, wd), jnp.uint32),
+        interpret=interpret,
+    )

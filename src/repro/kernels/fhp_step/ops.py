@@ -1,0 +1,79 @@
+"""Jitted wrappers for the fused FHP Pallas kernel.
+
+``fhp_step_pallas`` is a drop-in replacement for
+``core.bitplane.step_planes`` (bit-identical given the same
+``t / p_force / y0 / xw0``); ``run_pallas`` advances many steps with a
+donated carry.  On non-TPU backends the kernel runs in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prng
+from repro.kernels.fhp_step import kernel as _k
+
+# v5e VMEM is ~128 MiB but a realistic per-kernel working-set budget is far
+# smaller; we keep the resident blocks (3 input bands + 1 output band +
+# boolean temporaries, ~2x slack) under this.
+VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+
+def vmem_bytes(bh: int, wd: int) -> int:
+    """Estimated VMEM working set of one program instance."""
+    band = 8 * bh * wd * 4
+    temps = 24 * bh * wd * 4          # collision conditions + streams
+    return 4 * band + temps
+
+
+def pick_block_rows(h: int, wd: int) -> int:
+    """Largest power-of-two band height (<=32) that divides H and fits VMEM."""
+    bh = 32
+    while bh > 1 and (h % bh or vmem_bytes(bh, wd) > VMEM_BUDGET_BYTES):
+        bh //= 2
+    if h % bh or vmem_bytes(bh, wd) > VMEM_BUDGET_BYTES:
+        raise ValueError(f"no valid block for H={h}, Wd={wd}")
+    return bh
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "p_force", "block_rows", "rng_in_kernel", "interpret", "variant"))
+def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
+                    y0=0, xw0=0, block_rows: int = 0,
+                    rng_in_kernel: bool = True,
+                    interpret: bool | None = None,
+                    variant: str = "fhp2") -> jnp.ndarray:
+    """One fused stream+collide(+force) FHP step on (8, H, Wd) uint32 planes.
+
+    ``y0``/``xw0`` (global coordinates of local element (0,0)) may be
+    traced -- they ride into the kernel in the scalar block, so the kernel
+    composes with shard_map (per-shard offsets from axis_index)."""
+    _, h, wd = planes.shape
+    bh = block_rows or pick_block_rows(h, wd)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pq = prng.quantize_p(p_force)
+
+    step = _k.make_fhp_step(h, wd, bh=bh, pq=pq,
+                            rng_in_kernel=rng_in_kernel, interpret=interpret,
+                            variant=variant)
+    scalars = jnp.stack([jnp.asarray(t, jnp.int32),
+                         jnp.asarray(y0, jnp.int32),
+                         jnp.asarray(xw0, jnp.int32)]).reshape(1, 3)
+    args = [scalars, planes, planes, planes]
+    if not rng_in_kernel:
+        args.append(prng.chirality_words((h, wd), t, y0=y0, xw0=xw0))
+        if pq > 0:
+            args.append(prng.bernoulli_words((h, wd), t, p_force,
+                                             y0=y0, xw0=xw0))
+    return step(*args)
+
+
+def run_pallas(planes: jnp.ndarray, steps: int, *, p_force: float = 0.0,
+               t0=0, **kw) -> jnp.ndarray:
+    """Advance ``steps`` fused steps (fori_loop carry, donable)."""
+    def body(i, s):
+        return fhp_step_pallas(s, t0 + i, p_force=p_force, **kw)
+    return jax.lax.fori_loop(0, steps, body, planes)

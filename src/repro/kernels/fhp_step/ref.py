@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused FHP kernel.
+
+The oracle *is* the bit-plane reference stepper: ``core.bitplane.step_planes``
+draws the same counter-based chirality/forcing words, so the Pallas kernel
+must reproduce it bit-for-bit for every (shape, block_rows, p_force, t).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitplane
+
+
+def fhp_step_ref(planes: jnp.ndarray, t, *, p_force: float = 0.0,
+                 y0: int = 0, xw0: int = 0) -> jnp.ndarray:
+    return bitplane.step_planes(planes, t, p_force=p_force, y0=y0, xw0=xw0)

@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + os.environ.get("DRYRUN_DEVICES", "512")
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production mesh, and extract roofline terms from the artifact.
+
+The two lines above MUST precede any other import: jax locks the device
+count at first initialisation.  ``DRYRUN_DEVICES`` exists so the test
+suite can exercise this module at 8 devices in a subprocess; production
+invocations use the default 512 (= 2 pods x 256 chips).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch internlm2-20b --shape train_4k [--multi-pod] \
+        [--out results/cell.json] [--test-mesh]
+
+Exit code 0 == the cell compiled (sharding coherent, memory analysed).
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_config, get_smoke
+from repro.core import distributed
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mesh import (batch_axes, make_production_mesh,
+                               make_test_mesh)
+from repro.models import (ModelCfg, decode_step, init_cache, init_params,
+                          param_count, prefill)
+from repro.models.lm import cache_axes
+from repro.optim import AdamW, cosine_schedule
+from repro.parallel import Rules, tree_shardings
+from repro.roofline import analyze_compiled
+from repro.train import make_train_step
+
+
+def abstract_params(cfg: ModelCfg):
+    """(ShapeDtypeStruct params tree, logical axes tree) -- no allocation."""
+    captured: Dict[str, Any] = {}
+
+    def f(key):
+        p, a = init_params(cfg, key)
+        captured["axes"] = a
+        return p
+
+    sds = jax.eval_shape(f, jax.random.key(0))
+    return sds, captured["axes"]
+
+
+def opt_abstract(params_sds, state_dtype: str = "float32"):
+    dt = jnp.dtype(state_dtype)
+    mv = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {"m": jax.tree.map(mv, params_sds),
+            "v": jax.tree.map(mv, params_sds),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
+               opt_state_dtype: str = "float32",
+               cfg_override: Optional[ModelCfg] = None):
+    """Returns (fn, args_sds tuple, in_shardings tuple, donate, meta)."""
+    if cfg_override is not None:
+        cfg = cfg_override
+    else:
+        cfg = get_smoke(arch) if smoke else dataclasses.replace(
+            get_config(arch), dtype="bfloat16")
+    shape = SHAPES[shape_name]
+    rules = Rules(mesh, seq_parallel=cfg.seq_parallel)
+    counts = param_count(cfg)
+
+    params_sds, axes = abstract_params(cfg)
+    param_sh = jax.tree.unflatten(
+        jax.tree.structure(params_sds),
+        [NamedSharding(mesh, rules.spec(s.shape, a))
+         for s, a in zip(jax.tree.leaves(params_sds),
+                         jax.tree.structure(params_sds).flatten_up_to(axes))])
+    b_axes = batch_axes(mesh)
+    bspec = NamedSharding(mesh, P(b_axes))
+    gb, sl = shape.global_batch, shape.seq_len
+    if smoke:
+        gb, sl = max(len(jax.devices()) // 2, 2) * 2, 128
+
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "params_total": counts["total"], "params_active": counts["active"],
+            "global_batch": gb, "seq_len": sl,
+            "seq_parallel": cfg.seq_parallel, "pad_heads": cfg.pad_heads,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape))}
+
+    if shape.kind == "train":
+        batch_sds_d, batch_axes_d = make_batch_specs(cfg, sl, gb)
+        batch_sh = {k: NamedSharding(mesh, P(b_axes, *([None] * (len(v.shape) - 1))))
+                    for k, v in batch_sds_d.items()}
+        opt = AdamW(lr=cosine_schedule(3e-4, 100, 10_000),
+                    state_dtype=opt_state_dtype)
+        opt_sds = opt_abstract(params_sds, opt_state_dtype)
+        opt_sh = {"m": param_sh, "v": param_sh,
+                  "step": NamedSharding(mesh, P())}
+        fn = make_train_step(cfg, opt, microbatches=1)
+        # tokens-per-step x 6N = useful model FLOPs for one optimizer step
+        meta["model_flops"] = 6.0 * counts["active"] * gb * sl
+        return (fn, (params_sds, opt_sds, batch_sds_d),
+                (param_sh, opt_sh, batch_sh), (0, 1), meta)
+
+    if shape.kind == "prefill":
+        batch_sds_d, _ = make_batch_specs(cfg, sl, gb)
+        batch_sds_d.pop("labels")
+        batch_sh = {k: NamedSharding(mesh, P(b_axes, *([None] * (len(v.shape) - 1))))
+                    for k, v in batch_sds_d.items()}
+        fn = lambda p, b: prefill(p, cfg, b, max_len=sl)
+        meta["model_flops"] = 2.0 * counts["active"] * gb * sl
+        return (fn, (params_sds, batch_sds_d), (param_sh, batch_sh),
+                (), meta)
+
+    # decode: one new token against a cache of seq_len
+    cache_sds = jax.eval_shape(
+        lambda: init_cache(cfg, gb, sl, jnp.bfloat16))
+    cache_sh = tree_shardings(mesh, cache_sds, cache_axes(cfg))
+    tok_sds = jax.ShapeDtypeStruct((gb,), jnp.int32)
+    tok_sh = rules.sharding(tok_sds.shape, ("batch",))  # gb=1 -> replicated
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
+    meta["model_flops"] = 2.0 * counts["active"] * gb
+    return (fn, (params_sds, cache_sds, tok_sds, pos_sds),
+            (param_sh, cache_sh, tok_sh, NamedSharding(mesh, P())),
+            (1,), meta)
+
+
+def build_fhp_cell(mesh, *, h: int = 65536, w: int = 2 ** 21,
+                   steps: int = 1, depth: int = 1, scheme: str = "shardmap",
+                   p_force: float = 0.01):
+    """FHP lattice cell: `steps` fused steps on an (H, W) channel.
+
+    Default steps=1 so the fori_loop trip-count undercount cannot skew the
+    per-step roofline accounting (the body IS one full lattice step)."""
+    wd = w // 32
+    y_axes = batch_axes(mesh)
+    spec = distributed.lattice_spec(y_axes, "model")
+    sh = NamedSharding(mesh, spec)
+    planes_sds = jax.ShapeDtypeStruct((8, h, wd), jnp.uint32)
+    t_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    if scheme == "shardmap":
+        run = distributed.make_run(mesh, steps, y_axes=y_axes,
+                                   x_axis="model", p_force=p_force,
+                                   depth=depth)
+    else:
+        run = distributed.make_gspmd_run(mesh, steps, y_axes=y_axes,
+                                         x_axis="model", p_force=p_force)
+    meta = {"arch": "fhp-lattice", "shape": f"{h}x{w}", "kind": "fhp",
+            "steps": steps, "depth": depth, "scheme": scheme,
+            "sites": h * w, "model_flops": None,
+            "useful_bytes": 8 * h * wd * 4 * 2 * steps,  # RW per step
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape))}
+    return run, (planes_sds, t_sds), (sh, NamedSharding(mesh, P())), (0,), meta
+
+
+# ---------------------------------------------------------------------------
+# Scan trip-count cost correction.
+#
+# XLA's cost analysis counts a while-loop body ONCE, so the deep layer
+# scans (the whole point of scanning: HLO size independent of depth) make
+# flops/bytes/collective totals under-count by ~n_layers.  Costs are affine
+# in the depth knobs -- cost = C0 + sum_k N_k * delta_k  (and bilinear
+# G*(P*m + s) for zamba2's nested scan) -- so we lower shallow variants
+# (every knob at 1, then each knob at 2), solve for the per-layer deltas,
+# and extrapolate to the real depths.  Per-layer shapes are depth-
+# independent, so the deltas are exact, not estimates.
+# ---------------------------------------------------------------------------
+
+def _knob_cfgs(cfg: ModelCfg):
+    """Returns (targets, variants): depth-knob target values and the list
+    of (tag, shallow_cfg) points needed to solve for per-layer deltas."""
+    cyc = len(cfg.cycle)
+    rep = dataclasses.replace
+
+    if cfg.family == "hybrid":
+        base = rep(cfg, n_layers=1, shared_attn_period=1)
+        g2 = rep(cfg, n_layers=2, shared_attn_period=1)
+        p2 = rep(cfg, n_layers=2, shared_attn_period=2)
+        targets = {"G": cfg.n_cycles // cfg.shared_attn_period,
+                   "P": cfg.shared_attn_period}
+        return targets, [("base", base), ("G2", g2), ("P2", p2)]
+
+    prefix = cfg.moe.first_dense if cfg.moe else 0
+    variants = []
+    targets = {"cycles": cfg.n_cycles}
+    mk = lambda nc, np_, ne: rep(
+        cfg,
+        n_layers=np_ + nc * cyc,
+        moe=(rep(cfg.moe, first_dense=np_) if cfg.moe else None),
+        enc_layers=ne)
+    np1 = 1 if prefix else 0
+    ne1 = 1 if cfg.enc_layers else 0
+    variants.append(("base", mk(1, np1, ne1)))
+    variants.append(("cyc2", mk(2, np1, ne1)))
+    if prefix:
+        targets["prefix"] = prefix
+        variants.append(("pre2", mk(1, 2, ne1)))
+    if cfg.enc_layers:
+        targets["enc"] = cfg.enc_layers
+        variants.append(("enc2", mk(1, np1, 2)))
+    return targets, variants
+
+
+def _extrapolate(cfg, targets, costs):
+    """Solve the affine model and return corrected totals."""
+    out = {}
+    for key in ("flops", "bytes", "bytes_xla", "coll_op", "coll_wire"):
+        cb = costs["base"][key]
+        # per-layer deltas cannot be negative; tiny negatives appear when a
+        # shallow variant's fusion boundaries shift (decode cells where C0
+        # dominates) -- clamp to 0.
+        d = lambda tag: max(costs[tag][key] - cb, 0.0)
+        if cfg.family == "hybrid":
+            m = d("P2")
+            s = max(costs["G2"][key] - cb - m, 0.0)
+            c0 = cb - m - s
+            out[key] = c0 + targets["G"] * (targets["P"] * m + s)
+        else:
+            total = cb
+            total += d("cyc2") * (targets["cycles"] - 1)
+            if "prefix" in targets:
+                total += d("pre2") * (targets["prefix"] - 1)
+            if "enc" in targets:
+                total += d("enc2") * (targets["enc"] - 1)
+            out[key] = total
+    return out
+
+
+def _measure(fn, args, in_sh, donate, mesh, rules) -> Dict[str, float]:
+    from repro.models import common as cm
+    from repro.parallel.context import use_rules
+    with mesh:
+        with use_rules(rules), cm.unroll_scans():
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               donate_argnums=donate).lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    from repro.roofline import collective_bytes
+    from repro.roofline.analysis import hbm_bytes_estimate
+    text = compiled.as_text()
+    cb = collective_bytes(text)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": hbm_bytes_estimate(text),
+            "bytes_xla": float(ca.get("bytes accessed", 0.0)),
+            "coll_op": cb["_total"]["operand_bytes"],
+            "coll_wire": cb["_total"]["wire_bytes"]}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             test_mesh: bool = False, smoke: bool = False,
+             fhp_kw: Optional[dict] = None,
+             cfg_override: Optional[ModelCfg] = None,
+             correct_scan_costs: bool = True) -> Dict:
+    from repro.parallel.context import use_rules
+    mesh = (make_test_mesh(multi_pod=multi_pod) if test_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    if arch == "fhp-lattice":
+        fn, args, in_sh, donate, meta = build_fhp_cell(mesh, **(fhp_kw or {}))
+        correct_scan_costs = False  # fori body is one full lattice step
+    else:
+        fn, args, in_sh, donate, meta = build_cell(
+            arch, shape_name, mesh, smoke=smoke, cfg_override=cfg_override)
+    rules = Rules(mesh, seq_parallel=bool(meta.get("seq_parallel")))
+    t0 = time.time()
+    with mesh:
+        with use_rules(rules):
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            print(mem)                      # proves it fits
+            cost = compiled.cost_analysis()
+            print({k: v for k, v in (cost or {}).items()
+                   if k in ("flops", "bytes accessed")})
+    chips = mesh.devices.size
+    rec = analyze_compiled(compiled, model_flops=meta.get("model_flops"),
+                           chips=chips)
+    rec["terms_measured"] = rec["terms"]
+
+    if correct_scan_costs:
+        if cfg_override is not None:
+            cfg = cfg_override
+        else:
+            cfg = get_smoke(arch) if smoke else dataclasses.replace(
+                get_config(arch), dtype="bfloat16")
+        targets, variants = _knob_cfgs(cfg)
+        costs = {}
+        for tag, vcfg in variants:
+            vfn, vargs, vsh, vdon, _ = build_cell(
+                arch, shape_name, mesh, smoke=smoke, cfg_override=vcfg)
+            costs[tag] = _measure(vfn, vargs, vsh, vdon, mesh, rules)
+        corr = _extrapolate(cfg, targets, costs)
+        from repro.roofline import roofline_terms
+        rec["flops_per_device"] = corr["flops"]
+        rec["bytes_per_device"] = corr["bytes"]
+        rec["bytes_xla_prefusion_per_device"] = corr["bytes_xla"]
+        rec["collective_bytes_per_device"] = corr["coll_op"]
+        rec["collective_wire_bytes_per_device"] = corr["coll_wire"]
+        rec["terms"] = roofline_terms(corr["flops"], corr["bytes"],
+                                      corr["coll_op"])
+        if meta.get("model_flops"):
+            hlo_global = corr["flops"] * chips
+            rec["model_flops_ratio"] = (meta["model_flops"] / hlo_global
+                                        if hlo_global else 0.0)
+            t = rec["terms"]["step_s_lower_bound"]
+            rec["roofline_fraction"] = (
+                (meta["model_flops"] / chips / 197e12) / t if t else 0.0)
+        rec["scan_cost_correction"] = "depth-knob extrapolation"
+
+    rec.update(meta)
+    rec["chips"] = chips
+    rec["multi_pod"] = multi_pod
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    if meta.get("useful_bytes"):  # FHP: memory-roofline efficiency
+        per_dev = meta["useful_bytes"] / chips
+        rec["useful_bytes_ratio"] = (per_dev / rec["bytes_per_device"]
+                                     if rec["bytes_per_device"] else 0.0)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--test-mesh", action="store_true",
+                    help="4x2 (or 2x2x2) mesh for CI")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CI)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--fhp-scheme", default="shardmap",
+                    choices=["shardmap", "gspmd"])
+    ap.add_argument("--fhp-depth", type=int, default=1)
+    ap.add_argument("--fhp-h", type=int, default=65536)
+    ap.add_argument("--fhp-w", type=int, default=2 ** 21)
+    ap.add_argument("--fhp-steps", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    fhp_kw = None
+    if args.arch == "fhp-lattice":
+        fhp_kw = {"scheme": args.fhp_scheme, "depth": args.fhp_depth,
+                  "h": args.fhp_h, "w": args.fhp_w, "steps": args.fhp_steps}
+    else:
+        cfg = get_config(args.arch)
+        if args.shape not in applicable_shapes(cfg):
+            print(f"SKIP {args.arch} x {args.shape}: inapplicable "
+                  f"(family={cfg.family}); see DESIGN.md")
+            return 0
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   test_mesh=args.test_mesh, smoke=args.smoke,
+                   fhp_kw=fhp_kw)
+    out = json.dumps(rec, indent=2, default=str)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(out)
+    print(out)
+    print(f"DRYRUN OK {args.arch} x {args.shape} "
+          f"(multi_pod={args.multi_pod}) bound={rec['terms']['bound']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,112 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+results/dryrun JSON cells.
+
+    PYTHONPATH=src python -m repro.launch.report [--results results/dryrun]
+
+Prints markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+
+def load(results_dir: str) -> List[Dict]:
+    out = []
+    for fn in sorted(os.listdir(results_dir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(results_dir, fn)) as f:
+                r = json.load(f)
+            r["_file"] = fn
+            out.append(r)
+    return out
+
+
+def fmt(x, digits=3):
+    if x is None:
+        return "—"
+    if isinstance(x, float):
+        return f"{x:.{digits}g}"
+    return str(x)
+
+
+def dryrun_table(cells: List[Dict]) -> str:
+    rows = ["| cell | mesh | chips | bytes/dev (args+temp) | HLO flops/dev |"
+            " compile_s |",
+            "|---|---|---|---|---|---|"]
+    for r in cells:
+        ma = r.get("memory_analysis", {})
+        mem = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0))
+        mesh = "x".join(str(v) for v in r.get("mesh", {}).values())
+        rows.append(
+            f"| {r['_file'][:-5]} | {mesh} | {r.get('chips')} "
+            f"| {mem / 2**30:.2f} GiB | {fmt(r.get('flops_per_device'))} "
+            f"| {fmt(r.get('compile_s'))} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells: List[Dict], single_pod_only: bool = True) -> str:
+    rows = ["| arch × shape | bound | compute_s | memory_s | collective_s |"
+            " MF ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|"]
+    for r in cells:
+        if single_pod_only and r.get("multi_pod"):
+            continue
+        t = r.get("terms", {})
+        rows.append(
+            f"| {r.get('arch')} × {r.get('shape')} | {t.get('bound')} "
+            f"| {fmt(t.get('compute_s'))} | {fmt(t.get('memory_s'))} "
+            f"| {fmt(t.get('collective_s'))} | "
+            f"{fmt(r.get('model_flops_ratio'))} | "
+            f"{fmt(r.get('roofline_fraction'))} |")
+    return "\n".join(rows)
+
+
+def bottleneck_notes(cells: List[Dict]) -> str:
+    lines = []
+    for r in cells:
+        if r.get("multi_pod"):
+            continue
+        t = r.get("terms", {})
+        b = t.get("bound")
+        note = {
+            "compute": "raise MXU utilisation: bf16 backward cotangents, "
+                       "reduce replicated attention (head padding), "
+                       "causal-skip in chunked attention",
+            "memory": "cut activation materialisation: deeper fusion, "
+                      "larger microbatching, bf16 optimizer state, "
+                      "remat policy tuning",
+            "collective": "re-shard: sequence parallelism instead of TP "
+                          "all-reduces, halo-widening (FHP), overlap via "
+                          "scan-pipelined collectives",
+        }.get(b, "")
+        lines.append(f"- **{r.get('arch')} × {r.get('shape')}**: {b}-bound"
+                     f" → {note}.")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "notes"])
+    args = ap.parse_args()
+    cells = load(args.results)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run cells (compile + memory)\n")
+        print(dryrun_table(cells))
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline terms (single-pod 16×16, corrected)\n")
+        print(roofline_table(cells))
+        print()
+    if args.section in ("all", "notes"):
+        print("### Dominant-term notes\n")
+        print(bottleneck_notes(cells))
+
+
+if __name__ == "__main__":
+    main()

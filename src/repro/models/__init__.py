@@ -1,0 +1,3 @@
+from repro.models.config import MLACfg, MoECfg, ModelCfg, SSMCfg, param_count  # noqa: F401
+from repro.models.lm import (decode_step, forward, init_cache, init_params,  # noqa: F401
+                             loss_fn, prefill)

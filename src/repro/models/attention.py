@@ -1,0 +1,315 @@
+"""Attention blocks: GQA (with bias / qk-norm / softcap / sliding window /
+cross-attention) and DeepSeek-style MLA (multi-head latent attention).
+
+Training / prefill attention is *chunked* (flash-style online softmax over
+KV blocks via ``lax.scan``): peak memory is O(S * block) instead of O(S^2),
+which is what lets the 32k-prefill dry-run cells fit v5e HBM.  Decode takes
+the simple full-cache path (the score tensor has a single query position).
+
+MLA decode uses the absorbed formulation: the cache holds the compressed
+latent (kv_lora + rope_dim per token) and the up-projections are folded
+into the query / output sides, which is the whole point of MLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as cm
+
+NEG = -1e30
+
+
+def n_heads_eff(cfg) -> int:
+    """Effective (possibly padded) q-head count."""
+    return max(cfg.pad_heads, cfg.n_heads) if cfg.pad_heads else cfg.n_heads
+
+
+def _head_mask(cfg, dtype):
+    """(H_eff,) mask that zeroes padded dummy heads.
+
+    Dummy heads are distributed per KV group (the (B,S,KV,G,hd) reshape
+    assigns head h to group h // (H_eff/KV), so tail-padding would
+    reshuffle real heads across groups).  Because the mask is a constant,
+    dL/d(padded wq|wo) == 0: logits AND gradients are exactly those of
+    the unpadded model."""
+    he = n_heads_eff(cfg)
+    if he == cfg.n_heads:
+        return None
+    kv = cfg.n_kv_heads
+    assert he % kv == 0 and cfg.n_heads % kv == 0, (he, cfg.n_heads, kv)
+    g_pad, g_real = he // kv, cfg.n_heads // kv
+    return ((jnp.arange(he) % g_pad) < g_real).astype(dtype)
+
+
+def init_attn(init: cm.Init, cfg, cross: bool = False):
+    d, kv, hd = cfg.d_model, cfg.n_kv_heads, cfg.hd
+    h = n_heads_eff(cfg)
+    p = {
+        "wq": init.normal((d, h, hd), ("embed", "heads", None)),
+        "wk": init.normal((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": init.normal((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": init.normal((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = init.zeros((h, hd), ("heads", None))
+        p["bk"] = init.zeros((kv, hd), ("kv_heads", None))
+        p["bv"] = init.zeros((kv, hd), ("kv_heads", None))
+    if cfg.qk_norm:
+        p["qn"] = init.zeros((hd,), (None,))
+        p["kn"] = init.zeros((hd,), (None,))
+    return p
+
+
+def _qkv(p, x, cfg, kv_x=None, positions=None, rope: bool = True):
+    """Project to q (B,S,H,hd) and k/v (B,T,KV,hd), with bias/qk-norm/rope."""
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", kv_x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if "qn" in p:
+        q = cm.rms_norm(q, p["qn"], cfg.norm_eps)
+        k = cm.rms_norm(k, p["kn"], cfg.norm_eps)
+    if rope and positions is not None:
+        q = cm.apply_rope(q, positions, cfg.rope_frac, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_frac, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      cap: float = 0.0, bk: int = 1024,
+                      kv_positions=None, q_positions=None):
+    """Flash-style attention: scan over KV chunks with online softmax.
+
+    q: (B, S, H, hd);  k, v: (B, T, KV, hd) with H % KV == 0.
+    Returns (B, S, H, hd) in q.dtype.
+    """
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]  # MLA has v_dim != qk dim
+    g = h // kvh
+    bk = min(bk, t)
+    t_real = t
+    pad = (-t) % bk
+    if pad:  # pad KV to a block multiple; padded slots are masked out below
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = t + pad
+    nc = t // bk
+    qg = q.reshape(b, s, kvh, g, hd)
+    scale = hd ** -0.5
+    if q_positions is None:
+        q_positions = jnp.arange(s)
+    qpos = q_positions.astype(jnp.int32)  # (S,)
+    if kv_positions is None:
+        kv_positions = jnp.arange(t)
+    elif pad:
+        kv_positions = jnp.concatenate(
+            [kv_positions, jnp.full((pad,), 2 ** 30)])
+    kpos_all = kv_positions.astype(jnp.int32).reshape(nc, bk)
+    kvalid_all = (jnp.arange(t) < t_real).reshape(nc, bk)
+    ks = jnp.moveaxis(k.reshape(b, nc, bk, kvh, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nc, bk, kvh, hdv), 1, 0)
+
+    m0 = jnp.full((b, s, kvh, g), NEG, jnp.float32)
+    l0 = jnp.zeros((b, s, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, s, kvh, g, hdv), jnp.float32)
+
+    def body(carry, chunk):
+        m, l, acc = carry
+        kc, vc, kp, kva = chunk
+        sc = jnp.einsum("bskgh,btkh->bskgt", qg, kc,
+                        preferred_element_type=jnp.float32) * scale
+        if cap:
+            sc = cm.softcap(sc, cap)
+        mask = jnp.broadcast_to(kva[None, :], (s, bk))
+        if causal:
+            mask &= qpos[:, None] >= kp[None, :]
+        if window:
+            mask &= kp[None, :] > (qpos[:, None] - window)
+        sc = jnp.where(mask[None, :, None, None, :], sc, NEG)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pr = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + pr.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bskgt,btkh->bskgh", pr.astype(q.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0),
+                              (ks, vs, kpos_all, kvalid_all), unroll=cm.scan_unroll())
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, s, h, hdv).astype(q.dtype)
+
+
+def attn_block(p, x, cfg, *, positions, causal=True, window=0, kv_x=None,
+               rope=True):
+    """Full attention sub-block (projections + chunked attention + out)."""
+    q, k, v = _qkv(p, x, cfg, kv_x=kv_x, positions=positions, rope=rope)
+    if cfg.seq_parallel:
+        # activations are seq-sharded; attention needs the full K/V --
+        # force replication (one all-gather) instead of TP all-reduces.
+        from repro.parallel import context
+        k = context.constrain(k, ("batch", None, None, None))
+        v = context.constrain(v, ("batch", None, None, None))
+    o = chunked_attention(q, k, v, causal=causal, window=window,
+                          cap=cfg.attn_softcap)
+    hm = _head_mask(cfg, o.dtype)
+    if hm is not None:
+        o = o * hm[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def _pos_vec(pos, b):
+    """Normalise scalar-or-(B,) decode positions to an int32 (B,) vector."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+
+
+def attn_decode(p, x, cfg, cache, pos, *, window=0, cross=False):
+    """x: (B, 1, D); cache: {"k","v"}: (B, T, KV, hd).  Returns (out, cache).
+
+    ``pos`` is a scalar or per-row (B,) vector (continuous batching: slots
+    may be at different depths).  Self-attention writes the new K/V at each
+    row's own position; cross-attention reads a static encoder-side cache.
+    """
+    b = x.shape[0]
+    pv = _pos_vec(pos, b)
+    if cross:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+        k, v = cache["k"], cache["v"]
+        t = k.shape[1]
+        mask = jnp.ones((b, t), bool)
+    else:
+        q, k1, v1 = _qkv(p, x, cfg, positions=pv[:, None], rope=True)
+        rows = jnp.arange(b)
+        k = cache["k"].at[rows, pv].set(k1[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, pv].set(v1[:, 0].astype(cache["v"].dtype))
+        cache = {"k": k, "v": v}
+        t = k.shape[1]
+        kpos = jnp.arange(t)
+        mask = kpos[None, :] <= pv[:, None]
+        if window:
+            mask &= kpos[None, :] > (pv[:, None] - window)
+    _, _, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    sc = jnp.einsum("bskgh,btkh->bskgt", qg, k.astype(q.dtype),
+                    preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if cfg.attn_softcap:
+        sc = cm.softcap(sc, cfg.attn_softcap)
+    sc = jnp.where(mask[:, None, None, None, :], sc, NEG)
+    pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bskgt,btkh->bskgh", pr, v.astype(q.dtype))
+    o = o.reshape(b, 1, h, hd)
+    hm = _head_mask(cfg, o.dtype)
+    if hm is not None:
+        o = o * hm[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, cache
+
+
+def init_decode_cache(init_dtype, cfg, batch: int, max_len: int):
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    z = jnp.zeros((batch, max_len, kv, hd), init_dtype)
+    return {"k": z, "v": z}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(init: cm.Init, cfg):
+    m, d, h = cfg.mla, cfg.d_model, cfg.n_heads
+    qk = m.nope_dim + m.rope_dim
+    return {
+        "wdq": init.normal((d, m.q_lora), ("embed", None)),
+        "qn": init.zeros((m.q_lora,), (None,)),
+        "wuq": init.normal((m.q_lora, h, qk), (None, "heads", None)),
+        "wdkv": init.normal((d, m.kv_lora), ("embed", None)),
+        "kvn": init.zeros((m.kv_lora,), (None,)),
+        "wkr": init.normal((d, m.rope_dim), ("embed", None)),
+        "wuk": init.normal((m.kv_lora, h, m.nope_dim), (None, "heads", None)),
+        "wuv": init.normal((m.kv_lora, h, m.v_dim), (None, "heads", None)),
+        "wo": init.normal((h, m.v_dim, d), ("heads", None, "embed")),
+    }
+
+
+def _mla_qkr(p, x, cfg, positions):
+    m = cfg.mla
+    cq = cm.rms_norm(jnp.einsum("bsd,dq->bsq", x, p["wdq"].astype(x.dtype)),
+                     p["qn"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", cq, p["wuq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_rope = cm.apply_rope(q_rope, positions, 1.0, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    m = cfg.mla
+    c = cm.rms_norm(jnp.einsum("bsd,dc->bsc", x, p["wdkv"].astype(x.dtype)),
+                    p["kvn"], cfg.norm_eps)
+    kr = jnp.einsum("bsd,dr->bsr", x, p["wkr"].astype(x.dtype))
+    kr = cm.apply_rope(kr[:, :, None, :], positions, 1.0,
+                       cfg.rope_theta)[:, :, 0, :]
+    return c, kr
+
+
+def mla_block(p, x, cfg, *, positions):
+    """Training / prefill MLA: expand latent to per-head K/V, chunked attn."""
+    m = cfg.mla
+    q_nope, q_rope = _mla_qkr(p, x, cfg, positions)
+    c, kr = _mla_latent(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsc,chk->bshk", c, p["wuk"].astype(x.dtype))
+    v = jnp.einsum("bsc,chv->bshv", c, p["wuv"].astype(x.dtype))
+    h = cfg.n_heads
+    k_rope = jnp.broadcast_to(kr[:, :, None, :], kr.shape[:2] + (h, m.rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    o = chunked_attention(q, k, v, causal=True)
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def mla_decode(p, x, cfg, cache, pos):
+    """Absorbed MLA decode: cache is {"c": (B,T,kv_lora), "kr": (B,T,rope)}.
+    ``pos`` is a scalar or per-row (B,) vector."""
+    m = cfg.mla
+    b = x.shape[0]
+    pv = _pos_vec(pos, b)
+    q_nope, q_rope = _mla_qkr(p, x, cfg, pv[:, None])
+    c1, kr1 = _mla_latent(p, x, cfg, pv[:, None])
+    rows = jnp.arange(b)
+    c = cache["c"].at[rows, pv].set(c1[:, 0].astype(cache["c"].dtype))
+    kr = cache["kr"].at[rows, pv].set(kr1[:, 0].astype(cache["kr"].dtype))
+    cache = {"c": c, "kr": kr}
+    # Absorb W_uk into q: score latent side.
+    q_lat = jnp.einsum("bshk,chk->bshc", q_nope, p["wuk"].astype(x.dtype))
+    sc = (jnp.einsum("bshc,btc->bsht", q_lat, c.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+          + jnp.einsum("bshr,btr->bsht", q_rope, kr.astype(x.dtype),
+                       preferred_element_type=jnp.float32))
+    sc = sc * ((m.nope_dim + m.rope_dim) ** -0.5)
+    mask = jnp.arange(c.shape[1])[None, :] <= pv[:, None]
+    sc = jnp.where(mask[:, None, None, :], sc, NEG)
+    pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bsht,btc->bshc", pr, c.astype(x.dtype))
+    o = jnp.einsum("bshc,chv->bshv", ctx, p["wuv"].astype(x.dtype))
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(x.dtype)), cache
+
+
+def init_mla_cache(dtype, cfg, batch: int, max_len: int):
+    m = cfg.mla
+    return {"c": jnp.zeros((batch, max_len, m.kv_lora), dtype),
+            "kr": jnp.zeros((batch, max_len, m.rope_dim), dtype)}

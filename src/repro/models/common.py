@@ -1,0 +1,159 @@
+"""Shared model building blocks: parameter leaves with logical axes,
+norms, rotary embeddings, initializers, numeric helpers.
+
+Parameters are plain pytrees of jnp arrays; alongside every params tree the
+init functions build a parallel tree of *logical axis tuples* (one string or
+None per array dim).  ``repro.parallel.rules`` maps logical axes to mesh
+axes, so models never mention mesh names.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# When set, every model-internal lax.scan fully unrolls.  Used ONLY by the
+# dry-run's shallow cost-probe variants: XLA cost analysis counts a while
+# loop body once regardless of trip count, so per-layer/per-chunk cost
+# deltas are only measurable on unrolled HLO.  Production lowering keeps
+# scans rolled (HLO size independent of depth).
+_UNROLL = contextvars.ContextVar("repro_unroll_scans", default=False)
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def scan_unroll():
+    """Value for lax.scan's ``unroll=`` at model scan sites."""
+    return True if _UNROLL.get() else 1
+
+
+@dataclasses.dataclass
+class P_:
+    """A parameter leaf paired with its logical axes (pre-split form)."""
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+def is_leaf(x):
+    return isinstance(x, P_)
+
+
+def split_tree(tree):
+    """Split a tree with P_ leaves into (params, logical_axes) trees."""
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=is_leaf)
+    return params, axes
+
+
+class Init:
+    """Deterministic splittable initializer (folds a path into the key)."""
+
+    def __init__(self, key, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+        self._n = 0
+
+    def _next(self):
+        self._n += 1
+        return jax.random.fold_in(self.key, self._n)
+
+    def normal(self, shape, axes, scale=0.02):
+        v = (jax.random.normal(self._next(), shape, jnp.float32)
+             * scale).astype(self.dtype)
+        return P_(v, axes)
+
+    def zeros(self, shape, axes):
+        return P_(jnp.zeros(shape, self.dtype), axes)
+
+    def ones(self, shape, axes):
+        return P_(jnp.ones(shape, self.dtype), axes)
+
+    def const(self, value, axes):
+        return P_(jnp.asarray(value, self.dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in fp32, cast back)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p, kind: str, eps: float):
+    if kind == "layer":
+        return layer_norm(x, p["w"], p["b"], eps)
+    return rms_norm(x, p["w"], eps)
+
+
+def init_norm(init: Init, d: int, kind: str):
+    if kind == "layer":
+        return {"w": init.ones((d,), (None,)), "b": init.zeros((d,), (None,))}
+    return {"w": init.zeros((d,), (None,))}  # rms stored as (1 + w)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (partial fraction supported)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(hd: int, frac: float, theta: float):
+    """Inverse frequencies for the rotated sub-dimension (rot_dim//2,)."""
+    rot = int(hd * frac) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return jnp.asarray(inv, jnp.float32), rot
+
+
+def apply_rope(x, positions, frac=1.0, theta=10000.0):
+    """x: (..., S, n_heads, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv, rot = rope_frequencies(hd, frac, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1.astype(x.dtype), o2.astype(x.dtype), xp],
+                           axis=-1)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def cdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)

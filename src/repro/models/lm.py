@@ -1,0 +1,673 @@
+"""Model assembly: parameter init, training forward/loss, prefill, decode.
+
+One code path covers all 10 assigned architectures:
+
+* layer heterogeneity is a repeating ``cfg.layer_pattern`` cycle; parameters
+  are stacked per pattern position and the forward pass is a single
+  ``lax.scan`` over cycles (HLO size independent of depth; deepseek's
+  dense prefix is a second, shorter scan);
+* ``encdec`` adds an encoder stack and cross-attention in decoder blocks
+  (seamless; the audio frontend is a stub -- inputs are precomputed frame
+  embeddings per the assignment);
+* ``hybrid`` (zamba2) groups mamba layers and applies one of the shared
+  transformer blocks between groups (round-robin);
+* deepseek's MTP is an optional depth-1 extra block + tied head.
+
+Parameters are pytrees of fp32 arrays with a parallel tree of logical axis
+names (see ``common.P_``); compute casts to ``cfg.dtype``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelCfg
+from repro.models.mlp import init_mlp, mlp_block
+from repro.parallel import context
+
+
+class StackedInit(cm.Init):
+    """Init that prepends a (layers,) dim to every parameter it draws."""
+
+    def __init__(self, key, dtype, n: int):
+        super().__init__(key, dtype)
+        self.n = n
+
+    def normal(self, shape, axes, scale=0.02):
+        return super().normal((self.n,) + tuple(shape), ("layers",) + tuple(axes), scale)
+
+    def zeros(self, shape, axes):
+        return super().zeros((self.n,) + tuple(shape), ("layers",) + tuple(axes))
+
+    def ones(self, shape, axes):
+        return super().ones((self.n,) + tuple(shape), ("layers",) + tuple(axes))
+
+    def const(self, value, axes):
+        v = jnp.asarray(value, self.dtype)
+        return cm.P_(jnp.broadcast_to(v, (self.n,) + v.shape),
+                     ("layers",) + tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def init_block(init: cm.Init, cfg: ModelCfg, kind: str, *,
+               cross: bool = False, d_ff: int = 0):
+    """One layer's parameters.  kind: a=attn, l=local-attn, e=attn+moe,
+    m=mamba.  ``cross`` adds a cross-attention sub-block (encdec decoder)."""
+    d = cfg.d_model
+    p: Dict[str, Any] = {"n1": cm.init_norm(init, d, cfg.norm)}
+    if kind == "m":
+        p["ssm"] = ssm_mod.init_ssm(init, cfg)
+        return p
+    p["attn"] = attn.init_mla(init, cfg) if cfg.mla else attn.init_attn(init, cfg)
+    if cross:
+        p["nx"] = cm.init_norm(init, d, cfg.norm)
+        p["xattn"] = attn.init_attn(init, cfg, cross=True)
+    p["n2"] = cm.init_norm(init, d, cfg.norm)
+    if kind == "e":
+        p["ffn"] = moe_mod.init_moe(init, cfg)
+    else:
+        p["ffn"] = init_mlp(init, d, d_ff or cfg.d_ff)
+    if cfg.post_norms:
+        p["pn1"] = cm.init_norm(init, d, cfg.norm)
+        p["pn2"] = cm.init_norm(init, d, cfg.norm)
+    return p
+
+
+def block_apply(p, x, cfg: ModelCfg, kind: str, *, positions, causal=True,
+                enc_out=None, train=True):
+    """Pre-norm residual block.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.seq_parallel:
+        x = context.constrain(x, ("batch", "seq", None))
+    h = cm.apply_norm(x, p["n1"], cfg.norm, cfg.norm_eps)
+    if kind == "m":
+        return x + ssm_mod.ssm_block(p["ssm"], h, cfg), aux
+    window = cfg.local_window if kind == "l" else 0
+    if cfg.mla:
+        a = attn.mla_block(p["attn"], h, cfg, positions=positions)
+    else:
+        a = attn.attn_block(p["attn"], h, cfg, positions=positions,
+                            causal=causal, window=window)
+    if cfg.post_norms:
+        a = cm.apply_norm(a, p["pn1"], cfg.norm, cfg.norm_eps)
+    x = x + a
+    if "xattn" in p and enc_out is not None:
+        hx = cm.apply_norm(x, p["nx"], cfg.norm, cfg.norm_eps)
+        cx = attn.attn_block(p["xattn"], hx, cfg, positions=None,
+                             causal=False, kv_x=enc_out, rope=False)
+        x = x + cx
+    h = cm.apply_norm(x, p["n2"], cfg.norm, cfg.norm_eps)
+    if kind == "e":
+        f, aux = moe_mod.moe_block(p["ffn"], h, cfg)
+    else:
+        f = mlp_block(p["ffn"], h)
+    if cfg.post_norms:
+        f = cm.apply_norm(f, p["pn2"], cfg.norm, cfg.norm_eps)
+    return x + f, aux
+
+
+# ---------------------------------------------------------------------------
+# Parameter init for the whole model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelCfg, key) -> Tuple[Any, Any]:
+    """Returns (params, logical_axes) pytrees (fp32 master params)."""
+    cfg.validate()
+    root = cm.Init(key)
+    d = cfg.d_model
+    tree: Dict[str, Any] = {}
+    tree["embed"] = root.normal((cfg.vocab, d), ("vocab", "embed"))
+
+    if cfg.moe and cfg.moe.first_dense:
+        st = StackedInit(jax.random.fold_in(key, 101), jnp.float32,
+                         cfg.moe.first_dense)
+        tree["prefix"] = init_block(st, cfg, "a", d_ff=cfg.d_ff)
+
+    cyc = {}
+    for ci, kind in enumerate(cfg.cycle):
+        st = StackedInit(jax.random.fold_in(key, 200 + ci), jnp.float32,
+                         cfg.n_cycles)
+        cyc[f"{ci}_{kind}"] = init_block(
+            st, cfg, kind, cross=cfg.enc_layers > 0,
+            d_ff=(cfg.moe.d_ff_expert if kind == "e" and cfg.moe else 0) or cfg.d_ff)
+    tree["layers"] = cyc
+
+    if cfg.shared_attn_period:
+        st = StackedInit(jax.random.fold_in(key, 300), jnp.float32,
+                         cfg.n_shared_blocks)
+        tree["shared"] = init_block(st, cfg, "a", d_ff=cfg.shared_d_ff)
+
+    if cfg.enc_layers:
+        st = StackedInit(jax.random.fold_in(key, 400), jnp.float32,
+                         cfg.enc_layers)
+        tree["enc_layers"] = init_block(st, cfg, "a", d_ff=cfg.d_ff)
+        tree["enc_norm"] = cm.init_norm(root, d, cfg.norm)
+
+    tree["final_norm"] = cm.init_norm(root, d, cfg.norm)
+    if not cfg.tie_embeddings:
+        tree["head"] = root.normal((d, cfg.vocab), ("embed", "vocab"))
+
+    if cfg.mtp:
+        mi = cm.Init(jax.random.fold_in(key, 500))
+        tree["mtp"] = {
+            "proj": mi.normal((2 * d, d), (None, "embed")),
+            "block": init_block(mi, cfg, "a", d_ff=cfg.d_ff),
+            "norm": cm.init_norm(mi, d, cfg.norm),
+        }
+    return cm.split_tree(tree)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens):
+    x = params["embed"].astype(cm.cdtype(cfg))[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _head(params, cfg, x):
+    x = cm.apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    x = context.constrain(x, ("batch", None, None))
+    w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    if cfg.logit_softcap:
+        logits = cm.softcap(logits.astype(jnp.float32),
+                            cfg.logit_softcap).astype(x.dtype)
+    # Logits stay in the compute dtype: the CE upcasts internally, and the
+    # cotangents (softmax - onehot) then flow backward in bf16 -- halving
+    # every backward activation AND the gradient all-reduces (§Perf E5).
+    # Keep batch sharded and vocab TP-sharded: without the pin, GSPMD has
+    # been observed to all-gather the *global batch* here (24 GB buffers).
+    return context.constrain(logits, ("batch", None, "vocab"))
+
+
+def _scan_stack(x, stacks, cfg, *, positions, causal=True, enc_out=None,
+                train=True, kinds=None):
+    """Scan a repeating cycle of layer kinds over stacked params."""
+    kinds = kinds or cfg.cycle
+
+    def body(carry, xs):
+        h, aux = carry
+        for kind, p in zip(kinds, xs):
+            h, a = block_apply(p, h, cfg, kind, positions=positions,
+                               causal=causal, enc_out=enc_out, train=train)
+            aux = aux + a
+        return (h, aux), None
+
+    if cfg.remat and train:
+        body = jax.checkpoint(body)
+    xs = tuple(stacks[k] for k in sorted(stacks))
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs, unroll=cm.scan_unroll())
+    return x, aux
+
+
+def _hybrid_stack(params, x, cfg, *, positions, train=True):
+    """zamba2: groups of ``shared_attn_period`` mamba layers, a shared
+    transformer block (round-robin over ``n_shared_blocks``) after each."""
+    (key,) = [k for k in params["layers"]]
+    stack = params["layers"][key]
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_cycles // period
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, period) + a.shape[1:]), stack)
+    shared_idx = jnp.arange(n_groups) % cfg.n_shared_blocks
+
+    def group_body(carry, xs):
+        h, aux = carry
+        g_params, sidx = xs
+
+        def inner(c, p):
+            hh, ax = c
+            hh, a = block_apply(p, hh, cfg, "m", positions=positions,
+                                train=train)
+            return (hh, ax + a), None
+
+        (h, aux), _ = lax.scan(inner, (h, aux), g_params, unroll=cm.scan_unroll())
+        sp = jax.tree.map(lambda a: a[sidx], params["shared"])
+        h, a = block_apply(sp, h, cfg, "a", positions=positions, train=train)
+        return (h, aux + a), None
+
+    if cfg.remat and train:
+        group_body = jax.checkpoint(group_body)
+    (x, aux), _ = lax.scan(group_body, (x, jnp.zeros((), jnp.float32)),
+                           (grouped, shared_idx), unroll=cm.scan_unroll())
+    return x, aux
+
+
+def cast_params_for_compute(params, cfg: ModelCfg):
+    """Cast fp32 master matrices to the compute dtype ONCE, up front.
+
+    Every use site already does ``.astype(x.dtype)``, but casting before
+    the per-layer FSDP all-gathers halves their bytes (the partitioner
+    converts shard-locally, then gathers bf16).  1-D leaves (norm scales,
+    biases, SSM scalars) stay fp32 -- they are cheap and norm math wants
+    them exact.  Gradients still flow to the fp32 masters (cast is linear).
+    """
+    dt = cm.cdtype(cfg)
+    if dt == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(dt)
+        if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params)
+
+
+def forward(params, cfg: ModelCfg, batch: Dict[str, jnp.ndarray], *,
+            train=True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B,S,V) fp32, aux_loss scalar)."""
+    params = cast_params_for_compute(params, cfg)
+    dt = cm.cdtype(cfg)
+    enc_out = None
+    if cfg.enc_layers:
+        frames = batch["frames"].astype(dt)
+        pos_e = jnp.arange(frames.shape[1])
+        enc_out, _ = _scan_stack(frames, {"0": params["enc_layers"]}, cfg,
+                                 positions=pos_e, causal=False, train=train,
+                                 kinds=("a",))
+        enc_out = cm.apply_norm(enc_out, params["enc_norm"], cfg.norm,
+                                cfg.norm_eps)
+
+    tokens = batch["tokens"]
+    x = _embed(params, cfg, tokens)
+    positions = jnp.arange(tokens.shape[1])
+
+    aux = jnp.zeros((), jnp.float32)
+    if "prefix" in params:
+        x, a = _scan_stack(x, {"0": params["prefix"]}, cfg,
+                           positions=positions, train=train, kinds=("a",))
+        aux = aux + a
+
+    if cfg.family == "hybrid":
+        x, a = _hybrid_stack(params, x, cfg, positions=positions, train=train)
+    else:
+        x, a = _scan_stack(x, params["layers"], cfg, positions=positions,
+                           enc_out=enc_out, train=train)
+    aux = aux + a
+    logits = _head(params, cfg, x)
+    return logits, aux
+
+
+def _xent(logits, labels):
+    """Mean cross-entropy; logits fp32 (B,S,V), labels (B,S) int32.
+
+    The gold logit is a one-hot masked reduction, NOT take_along_axis: a
+    gather along the TP-sharded vocab dim gives the GSPMD partitioner no
+    good strategy and it falls back to gathering the batch (fatal at
+    256k-token global batches).  The masked sum keeps every dim aligned
+    with the logits sharding; the vocab reduction lowers to one psum.
+
+    Accepts bf16 logits (upcast here); the cotangent inherits the input
+    dtype, keeping the backward pass in bf16.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, lf.shape, len(lf.shape) - 1)
+    onehot = vocab_ids == labels[..., None]
+    gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(params, cfg: ModelCfg, batch) -> Tuple[jnp.ndarray, Dict]:
+    params = cast_params_for_compute(params, cfg)
+    logits, aux = forward(params, cfg, batch, train=True)
+    ce = _xent(logits, batch["labels"])
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+
+    if cfg.mtp and "mtp" in params:
+        # Depth-1 multi-token prediction: combine h_t with emb(x_{t+1}) and
+        # predict x_{t+2} through one extra block (deepseek-v3 sec. 2.2).
+        # Approximation: reuse the main trunk's *embedding* of the shifted
+        # token and the final logits trunk state via a stop-gradient-free
+        # second head pass on embeddings only (kept lightweight).
+        dt = cm.cdtype(cfg)
+        tokens = batch["tokens"]
+        x = _embed(params, cfg, tokens)
+        nxt = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        h2 = jnp.concatenate([x, _embed(params, cfg, nxt)], axis=-1)
+        h2 = jnp.einsum("bsd,dp->bsp", h2, params["mtp"]["proj"].astype(dt))
+        h2, _ = block_apply(params["mtp"]["block"], h2, cfg, "a",
+                            positions=jnp.arange(tokens.shape[1]), train=True)
+        h2 = cm.apply_norm(h2, params["mtp"]["norm"], cfg.norm, cfg.norm_eps)
+        w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        logits2 = jnp.einsum("bsd,dv->bsv", h2, w.astype(dt))
+        lbl2 = jnp.pad(batch["labels"][:, 1:], ((0, 0), (0, 1)))
+        mtp_ce = _xent(logits2[:, :-1], lbl2[:, :-1])
+        loss = loss + cfg.mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with stacked caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelCfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked KV/SSM caches matching the layer stacks."""
+    cache: Dict[str, Any] = {}
+
+    def stk(n, mk):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), mk)
+
+    if cfg.family == "hybrid":
+        period = cfg.shared_attn_period
+        n_groups = cfg.n_cycles // period
+        st, cv = ssm_mod.init_ssm_cache(dtype, cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups, period) + a.shape),
+            (st, cv))
+        cache["shared"] = stk(n_groups,
+                              attn.init_decode_cache(dtype, cfg, batch, max_len))
+        return cache
+    if cfg.family == "ssm":
+        st, cv = ssm_mod.init_ssm_cache(dtype, cfg, batch)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_cycles,) + a.shape), (st, cv))
+        return cache
+
+    mk = (attn.init_mla_cache(dtype, cfg, batch, max_len) if cfg.mla
+          else attn.init_decode_cache(dtype, cfg, batch, max_len))
+    if cfg.moe and cfg.moe.first_dense:
+        cache["prefix"] = stk(cfg.moe.first_dense, mk)
+    cache["layers"] = {f"{ci}_{k}": stk(cfg.n_cycles, mk)
+                       for ci, k in enumerate(cfg.cycle)}
+    if cfg.enc_layers:
+        cache["cross"] = stk(cfg.n_cycles, attn.init_decode_cache(
+            dtype, cfg, batch, 0))  # filled by prefill with true length
+    return cache
+
+
+def cache_axes(cfg: ModelCfg):
+    """Logical axis names mirroring ``init_cache``'s structure (for the
+    sharding-rules engine).  KV caches prefer kv-head sharding; when the
+    head count does not divide the mesh axis the rules engine falls back
+    to splitting the sequence (flash-decoding style)."""
+    kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+    mla_ax = {"c": ("layers", "batch", "kv_seq", None),
+              "kr": ("layers", "batch", "kv_seq", None)}
+    gqa_ax = {"k": kv, "v": kv}
+
+    if cfg.family == "hybrid":
+        ssm_state = (None, None, "batch", "heads", None, None)
+        ssm_conv = (None, None, "batch", None, "d_ff")
+        return {"ssm": (ssm_state, ssm_conv),
+                "shared": {"k": kv, "v": kv}}
+    if cfg.family == "ssm":
+        return {"ssm": ((None, "batch", "heads", None, None),
+                        (None, "batch", None, "d_ff"))}
+    per = mla_ax if cfg.mla else gqa_ax
+    out = {"layers": {f"{ci}_{k}": per for ci, k in enumerate(cfg.cycle)}}
+    if cfg.moe and cfg.moe.first_dense:
+        out["prefix"] = per
+    if cfg.enc_layers:
+        out["cross"] = {"k": kv, "v": kv}
+    return out
+
+
+def _decode_block(p, x, cfg, kind, cache, pos, enc_feats=None):
+    """Single-token residual block against a cache."""
+    h = cm.apply_norm(x, p["n1"], cfg.norm, cfg.norm_eps)
+    if kind == "m":
+        o, cache = ssm_mod.ssm_decode(p["ssm"], h, cfg, cache)
+        return x + o, cache
+    window = cfg.local_window if kind == "l" else 0
+    if cfg.mla:
+        a, cache = attn.mla_decode(p["attn"], h, cfg, cache, pos)
+    else:
+        a, cache = attn.attn_decode(p["attn"], h, cfg, cache, pos,
+                                    window=window)
+    if cfg.post_norms:
+        a = cm.apply_norm(a, p["pn1"], cfg.norm, cfg.norm_eps)
+    x = x + a
+    if "xattn" in p and enc_feats is not None:
+        hx = cm.apply_norm(x, p["nx"], cfg.norm, cfg.norm_eps)
+        cx, _ = attn.attn_decode(p["xattn"], hx, cfg, enc_feats, pos,
+                                 cross=True)
+        x = x + cx
+    h = cm.apply_norm(x, p["n2"], cfg.norm, cfg.norm_eps)
+    if kind == "e":
+        f, _ = moe_mod.moe_block(p["ffn"], h, cfg)
+    else:
+        f = mlp_block(p["ffn"], h)
+    if cfg.post_norms:
+        f = cm.apply_norm(f, p["pn2"], cfg.norm, cfg.norm_eps)
+    return x + f, cache
+
+
+def decode_step(params, cfg: ModelCfg, cache, token, pos,
+                enc_out_cache=None):
+    """token: (B,) int32; pos: scalar or (B,); returns (logits (B,V), cache)."""
+    params = cast_params_for_compute(params, cfg)
+    x = _embed(params, cfg, token[:, None])
+
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.family == "ssm":
+            (key,) = list(params["layers"])
+            def body(carry, xs):
+                h = carry
+                p, c = xs
+                h, c2 = _decode_block(p, h, cfg, "m", c, pos)
+                return h, c2
+            x, new_ssm = lax.scan(body, x, (params["layers"][key],
+                                            cache["ssm"]), unroll=cm.scan_unroll())
+            cache = {"ssm": new_ssm}
+        else:
+            (key,) = list(params["layers"])
+            stack = params["layers"][key]
+            period = cfg.shared_attn_period
+            n_groups = cfg.n_cycles // period
+            grouped = jax.tree.map(
+                lambda a: a.reshape((n_groups, period) + a.shape[1:]), stack)
+            sidx = jnp.arange(n_groups) % cfg.n_shared_blocks
+
+            def gbody(carry, xs):
+                h = carry
+                gp, gc, sc, si = xs
+
+                def inner(c, xs2):
+                    hh = c
+                    p, cc2 = xs2
+                    hh, cc2 = _decode_block(p, hh, cfg, "m", cc2, pos)
+                    return hh, cc2
+
+                h, gc2 = lax.scan(inner, h, (gp, gc), unroll=cm.scan_unroll())
+                sp = jax.tree.map(lambda a: a[si], params["shared"])
+                h, sc2 = _decode_block(sp, h, cfg, "a", sc, pos)
+                return h, (gc2, sc2)
+
+            x, (new_ssm, new_sh) = lax.scan(
+                gbody, x, (grouped, cache["ssm"], cache["shared"], sidx), unroll=cm.scan_unroll())
+            cache = {"ssm": new_ssm, "shared": new_sh}
+        logits = _head(params, cfg, x)[:, 0]
+        return logits, cache
+
+    new_cache: Dict[str, Any] = {}
+    if "prefix" in params:
+        def pbody(carry, xs):
+            h = carry
+            p, c = xs
+            h, c2 = _decode_block(p, h, cfg, "a", c, pos)
+            return h, c2
+        x, nc = lax.scan(pbody, x, (params["prefix"], cache["prefix"]), unroll=cm.scan_unroll())
+        new_cache["prefix"] = nc
+
+    names = sorted(params["layers"])
+    kinds = cfg.cycle
+
+    def body(carry, xs):
+        h = carry
+        ps, cs = xs[:len(names)], xs[len(names):-1] if cfg.enc_layers else xs[len(names):]
+        enc_c = xs[-1] if cfg.enc_layers else None
+        new_cs = []
+        for kind, p, c in zip(kinds, ps, cs):
+            h, c2 = _decode_block(p, h, cfg, kind, c, pos, enc_feats=enc_c)
+            new_cs.append(c2)
+        return h, tuple(new_cs)
+
+    xs = tuple(params["layers"][n] for n in names) + \
+         tuple(cache["layers"][n] for n in names)
+    if cfg.enc_layers:
+        xs = xs + (cache["cross"],)
+    x, ncs = lax.scan(body, x, xs, unroll=cm.scan_unroll())
+    new_cache["layers"] = {n: c for n, c in zip(names, ncs)}
+    if cfg.enc_layers:
+        new_cache["cross"] = cache["cross"]
+    logits = _head(params, cfg, x)[:, 0]
+    return logits, new_cache
+
+
+def _capture_kv(p, h, cfg, positions, c):
+    """Compute and store this layer's prompt K/V (or MLA latent) into its
+    cache slice [0, S)."""
+    hh = cm.apply_norm(h, p["n1"], cfg.norm, cfg.norm_eps)
+    if cfg.mla:
+        cmpr, kr = attn._mla_latent(p["attn"], hh, cfg, positions)
+        return {"c": lax.dynamic_update_slice_in_dim(
+                    c["c"], cmpr.astype(c["c"].dtype), 0, axis=1),
+                "kr": lax.dynamic_update_slice_in_dim(
+                    c["kr"], kr.astype(c["kr"].dtype), 0, axis=1)}
+    _, k, v = attn._qkv(p["attn"], hh, cfg, positions=positions)
+    return {"k": lax.dynamic_update_slice_in_dim(
+                c["k"], k.astype(c["k"].dtype), 0, axis=1),
+            "v": lax.dynamic_update_slice_in_dim(
+                c["v"], v.astype(c["v"].dtype), 0, axis=1)}
+
+
+def _prefill_attn_stack(stack, cache_stack, x, cfg, kinds, positions,
+                        enc_out=None):
+    """Scan a dict of attention-layer stacks, capturing per-layer caches."""
+    names = sorted(stack)
+
+    def body(carry, xs):
+        h = carry
+        ps, ccs = xs
+        new_cs = []
+        for kind, p, c in zip(kinds, ps, ccs):
+            c = _capture_kv(p, h, cfg, positions, c)
+            h, _ = block_apply(p, h, cfg, kind, positions=positions,
+                               enc_out=enc_out, train=False)
+            new_cs.append(c)
+        return h, tuple(new_cs)
+
+    xs = (tuple(stack[n] for n in names),
+          tuple(cache_stack[n] for n in names))
+    x, ncs = lax.scan(body, x, xs, unroll=cm.scan_unroll())
+    return x, {n: c for n, c in zip(names, ncs)}
+
+
+def prefill(params, cfg: ModelCfg, batch, max_len: int,
+            cache_dtype=jnp.bfloat16):
+    """Run the full prompt, build the decode cache, return last logits.
+
+    Attention families capture per-layer prompt K/V (MLA: the compressed
+    latent) into the cache; SSM/hybrid families use the chunked SSD forward
+    with ``return_state`` (prompts are right-padded to the chunk size with
+    dt masked to zero, so the captured state is exact).
+    """
+    params = cast_params_for_compute(params, cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    dt = cm.cdtype(cfg)
+
+    enc_out = None
+    if cfg.enc_layers:
+        frames = batch["frames"].astype(dt)
+        pos_e = jnp.arange(frames.shape[1])
+        enc_out, _ = _scan_stack(frames, {"0": params["enc_layers"]}, cfg,
+                                 positions=pos_e, causal=False, train=False,
+                                 kinds=("a",))
+        enc_out = cm.apply_norm(enc_out, params["enc_norm"], cfg.norm,
+                                cfg.norm_eps)
+
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+
+    if cfg.family in ("ssm", "hybrid"):
+        return _prefill_ssm(params, cfg, tokens, cache, cache_dtype)
+
+    x = _embed(params, cfg, tokens)
+    positions = jnp.arange(s)
+
+    if "prefix" in params:
+        x, nc = _prefill_attn_stack({"0": params["prefix"]},
+                                    {"0": cache["prefix"]}, x,
+                                    cfg, ("a",), positions)
+        cache["prefix"] = nc["0"]
+
+    x, ncs = _prefill_attn_stack(params["layers"], cache["layers"], x, cfg,
+                                 cfg.cycle, positions, enc_out=enc_out)
+    cache["layers"] = ncs
+
+    if cfg.enc_layers:
+        # Precompute cross K/V from encoder output, per decoder layer.
+        def xkv(p):
+            k = jnp.einsum("btd,dhk->bthk", enc_out,
+                           p["xattn"]["wk"].astype(dt))
+            v = jnp.einsum("btd,dhk->bthk", enc_out,
+                           p["xattn"]["wv"].astype(dt))
+            return {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+        (key,) = sorted(params["layers"])
+        cache["cross"] = jax.vmap(xkv)(params["layers"][key])
+
+    logits = _head(params, cfg, x)
+    return logits[:, -1], cache
+
+
+def _prefill_ssm(params, cfg, tokens, cache, cache_dtype):
+    """SSM / hybrid prefill: chunked SSD forward with exact state capture."""
+    b, s = tokens.shape
+    ck = cfg.ssm.chunk
+    pad = (-s) % ck
+    toks_p = jnp.pad(tokens, ((0, 0), (0, pad)))
+    mask = (jnp.arange(s + pad) < s)[None, :]
+    x = _embed(params, cfg, toks_p)
+    positions = jnp.arange(s + pad)
+    (key,) = sorted(params["layers"])
+    stack = params["layers"][key]
+
+    def mamba_body(carry, p):
+        h = carry
+        hh = cm.apply_norm(h, p["n1"], cfg.norm, cfg.norm_eps)
+        o, (st, cv) = ssm_mod.ssm_block(p["ssm"], hh, cfg, mask=mask,
+                                        return_state=True, real_len=s)
+        return h + o, (st, cv.astype(cache_dtype))
+
+    if cfg.family == "ssm":
+        x, states = lax.scan(mamba_body, x, stack, unroll=cm.scan_unroll())
+        cache = {"ssm": states}
+    else:
+        period = cfg.shared_attn_period
+        n_groups = cfg.n_cycles // period
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, period) + a.shape[1:]), stack)
+        sidx = jnp.arange(n_groups) % cfg.n_shared_blocks
+
+        def gbody(carry, xs):
+            h = carry
+            gp, sc, si = xs
+            h, sts = lax.scan(mamba_body, h, gp, unroll=cm.scan_unroll())
+            sp = jax.tree.map(lambda a: a[si], params["shared"])
+            sc = _capture_kv(sp, h, cfg, positions, sc)
+            h, _ = block_apply(sp, h, cfg, "a", positions=positions,
+                               train=False)
+            return h, (sts, sc)
+
+        x, (ssm_states, shared_c) = lax.scan(
+            gbody, x, (grouped, cache["shared"], sidx), unroll=cm.scan_unroll())
+        cache = {"ssm": ssm_states, "shared": shared_c}
+
+    logits = _head(params, cfg, x[:, s - 1:s, :])
+    return logits[:, 0], cache

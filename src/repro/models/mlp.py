@@ -1,0 +1,21 @@
+"""Dense feed-forward blocks (SwiGLU) used by every architecture."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def init_mlp(init: cm.Init, d: int, d_ff: int):
+    return {
+        "wg": init.normal((d, d_ff), ("embed", "d_ff")),
+        "wu": init.normal((d, d_ff), ("embed", "d_ff")),
+        "wd": init.normal((d_ff, d), ("d_ff", "embed")),
+    }
+
+
+def mlp_block(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+    h = cm.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))

@@ -1,0 +1,129 @@
+"""Mixture-of-experts layer: top-k routing with capacity, gather dispatch,
+scatter-add combine, optional shared (always-on) experts.
+
+Dispatch is gather-based (Megablocks-style positions, not the dense one-hot
+einsum): router top-k assignments are converted to per-expert slot indices
+with a cumulative count, tokens are gathered into an (E, C, D) buffer,
+experts run as a batched einsum over stacked weights, and outputs scatter-add
+back weighted by the router gate.  All shapes are static; with experts
+sharded over ``model`` and token/capacity dims over ``data`` the gathers
+lower to all-to-alls under GSPMD.
+
+Load-balance aux loss (Switch-style) is returned alongside the output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.mlp import init_mlp, mlp_block
+from repro.parallel import context
+
+
+def init_moe(init: cm.Init, cfg):
+    e, d = cfg.moe, cfg.d_model
+    f = e.d_ff_expert
+    p = {
+        "router": init.normal((d, e.n_experts), ("embed", "experts"), scale=0.006),
+        "wg": init.normal((e.n_experts, d, f), ("experts", "embed", "d_ff")),
+        "wu": init.normal((e.n_experts, d, f), ("experts", "embed", "d_ff")),
+        "wd": init.normal((e.n_experts, f, d), ("experts", "d_ff", "embed")),
+    }
+    if e.n_shared:
+        p["shared"] = init_mlp(init, d, f * e.n_shared)
+    return p
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    e = cfg.moe
+    c = int(n_tokens * e.top_k / e.n_experts * e.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _dispatch_groups(t: int) -> int:
+    """Hierarchical dispatch group count == data-parallel shard count.
+
+    The slot-assignment arithmetic (one-hot cumsum over T*k assignments)
+    is sequential along tokens, so GSPMD must replicate it -- at
+    deepseek-v3 train scale that was ~100x the expert-matmul flops, on
+    every chip.  Splitting tokens into per-data-shard groups with
+    per-group capacity (GShard/Switch semantics: capacity is per dispatch
+    group) makes the cumsum batch-sharded.  Without an installed rules
+    context (single-device tests) this returns 1 == the flat policy.
+    """
+    r = context.current_rules()
+    if r is None:
+        return 1
+    import numpy as np
+    g = int(np.prod([r.axis_sizes[a] for a in ("pod", "data")
+                     if a in r.axis_sizes]))
+    return g if g > 1 and t % g == 0 else 1
+
+
+def moe_block(p, x, cfg):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    e = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, e.top_k)            # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e f_e * P_e  (f = token fraction, P = prob mass)
+    f_e = jnp.zeros((e.n_experts,), jnp.float32).at[expert.reshape(-1)].add(
+        1.0 / (t * e.top_k))
+    p_e = probs.mean(axis=0)
+    aux = e.n_experts * jnp.sum(f_e * p_e) * e.aux_loss_weight
+
+    # Slot assignment per dispatch group (deterministic drop policy:
+    # later tokens in the group overflow first, as in Switch).
+    ng = _dispatch_groups(t)
+    tg = t // ng
+    cg = max(8, -(-capacity(t, cfg) // (8 * ng)) * 8)       # per-group cap
+    flat_e = expert.reshape(ng, tg * e.top_k)               # token-major
+    onehot = jax.nn.one_hot(flat_e, e.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - 1                    # (G, Tg*k, E)
+    slot = jnp.take_along_axis(
+        pos, flat_e[..., None], axis=2)[..., 0]             # (G, Tg*k)
+    keep = slot < cg
+
+    # Scatter local token ids into the (G, E, Cg) index table; dropped
+    # slots point at a zero pad row (local index tg).
+    tok_of = jnp.tile(jnp.repeat(jnp.arange(tg), e.top_k)[None], (ng, 1))
+    gi = jnp.arange(ng)[:, None]
+    idx = jnp.full((ng, e.n_experts, cg + 1), tg, jnp.int32)
+    idx = idx.at[gi, flat_e, jnp.where(keep, slot, cg)].set(
+        jnp.where(keep, tok_of, tg))[..., :cg]              # (G, E, Cg)
+
+    xg = xt.reshape(ng, tg, d)
+    xpad = jnp.concatenate([xg, jnp.zeros((ng, 1, d), xt.dtype)], axis=1)
+    gathered = jnp.take_along_axis(
+        xpad[:, :, None, :], idx[..., None], axis=1)        # (G, E, Cg, D)
+    # Pin the dispatch sharding: groups on the data axes, experts on the
+    # model axis (the gather gives GSPMD no signal; unpinned it replicated
+    # the expert einsums -- 40x compute blow-up on the multi-pod mesh).
+    gathered = context.constrain(gathered, ("batch", "experts", None, None))
+
+    g_ = jnp.einsum("gecd,edf->gecf", gathered, p["wg"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", gathered, p["wu"].astype(x.dtype))
+    y = jnp.einsum("gecf,efd->gecd", cm.silu(g_) * u, p["wd"].astype(x.dtype))
+    y = context.constrain(y, ("batch", "experts", None, None))
+
+    # Combine: scatter-add expert outputs back, weighted by the gate.
+    gate_g = gate.reshape(ng, tg * e.top_k)
+    w_ec = jnp.zeros((ng, e.n_experts, cg + 1), gate.dtype).at[
+        gi, flat_e, jnp.where(keep, slot, cg)].set(
+        jnp.where(keep, gate_g, 0.0))[..., :cg]             # (G, E, Cg)
+    upd = (y * w_ec[..., None].astype(y.dtype)).astype(jnp.float32)
+    out = jnp.zeros((ng, tg + 1, d), jnp.float32).at[
+        gi[:, :, None], idx].add(upd)
+    out = out[:, :tg].reshape(t, d).astype(x.dtype)
+
+    if "shared" in p:
+        out = out + mlp_block(p["shared"], xt[None])[0]
+    return out.reshape(b, s, d), aux

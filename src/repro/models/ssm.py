@@ -1,0 +1,205 @@
+"""Mamba-2 SSD (state-space duality) block: chunked-scan training forward
+and O(1) recurrent decode.
+
+The chunked algorithm mirrors the paper's (arXiv:2405.21060) block
+decomposition: quadratic attention-like intra-chunk term + low-rank
+inter-chunk term with a sequential state hand-off between chunks -- note
+the structural similarity to the FHP overlapping-block kernel (local
+compute + boundary state exchange), discussed in DESIGN.md.
+
+The SSD core runs in fp32 (cheap relative to the projections, and the
+cumulative decays are exp-sums that underflow in bf16).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import common as cm
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nheads, conv_ch
+
+
+def init_ssm(init: cm.Init, cfg):
+    s, d = cfg.ssm, cfg.d_model
+    d_in, nheads, conv_ch = dims(cfg)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nheads
+    # dt bias: softplus^-1 of dt ~ U[1e-3, 1e-1]; A ~ U[1, 16]
+    rng = np.random.default_rng(0)
+    dt0 = np.exp(rng.uniform(np.log(1e-3), np.log(1e-1), nheads))
+    dt_bias = dt0 + np.log(-np.expm1(-dt0))
+    a0 = rng.uniform(1.0, 16.0, nheads)
+    return {
+        "in_proj": init.normal((d, proj_out), ("embed", "d_ff")),
+        "conv_w": init.normal((s.conv_dim, conv_ch), (None, "d_ff"), scale=0.1),
+        "conv_b": init.zeros((conv_ch,), ("d_ff",)),
+        "A_log": init.const(np.log(a0), (None,)),
+        "D": init.ones((nheads,), (None,)),
+        "dt_bias": init.const(dt_bias, (None,)),
+        "norm_w": init.zeros((d_in,), (None,)),
+        "out_proj": init.normal((d_in, d), ("d_ff", "embed")),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    s = cfg.ssm
+    d_in, nheads, _ = dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xs, b, c, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, xs, b, c, dt
+
+
+def _causal_conv(x, w, bias):
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + bias[None, None, :]
+
+
+def ssm_block(p, x, cfg, *, mask=None, return_state=False,
+              real_len: int = 0):
+    """Training/prefill forward, chunked SSD.  x: (B, S, D) -> (B, S, D).
+
+    ``mask`` (B, S) zeroes dt at (right-)padded positions so the state is
+    unaffected by padding; with ``return_state`` also returns the decode
+    cache ``(state, conv_buf)`` at position ``real_len`` (static; defaults
+    to S), enabling exact prefill -> decode continuation.
+    """
+    s = cfg.ssm
+    d_in, nheads, _ = dims(cfg)
+    b_, seq, _ = x.shape
+    assert seq % s.chunk == 0, (seq, s.chunk)
+    nc, q = seq // s.chunk, s.chunk
+    hp, g, n = s.head_dim, s.n_groups, s.d_state
+
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(x.dtype))
+    z, xs, bb, cc, dt = _split_proj(zxbcdt, cfg)
+    xbc_raw = jnp.concatenate([xs, bb, cc], axis=-1)
+    xbc = cm.silu(_causal_conv(xbc_raw, p["conv_w"].astype(x.dtype),
+                               p["conv_b"].astype(x.dtype)))
+    xs, bb, cc = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+
+    xh = xs.reshape(b_, nc, q, nheads, hp).astype(jnp.float32)
+    bg = bb.reshape(b_, nc, q, g, n).astype(jnp.float32)
+    cg = cc.reshape(b_, nc, q, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    if mask is not None:
+        dt = dt * mask.astype(jnp.float32)[..., None]
+    dt = dt.reshape(b_, nc, q, nheads)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
+    da = dt * a                                             # (B,nc,Q,H) <= 0
+    lcum = jnp.cumsum(da, axis=2)                           # within-chunk
+
+    hg = nheads // g  # heads per B/C group
+
+    # --- intra-chunk (quadratic, masked) ---
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cg, bg)
+    # exp factor for source k -> query q is sum_{i=k+1..q} da_i = lcum_q - lcum_k
+    decay = lcum[..., :, None, :] - lcum[..., None, :, :]   # (B,nc,Q,K,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    w_qk = jnp.where(mask[None, None, :, :, None],
+                     jnp.exp(decay), 0.0)                   # (B,nc,Q,K,H)
+    cb_h = jnp.repeat(cb, hg, axis=2)                       # (B,nc,H,Q,K)
+    w_full = cb_h.transpose(0, 1, 3, 4, 2) * w_qk           # (B,nc,Q,K,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w_full, xh * dt[..., None])
+
+    # --- chunk states and inter-chunk hand-off ---
+    seg = jnp.exp(lcum[..., -1:, :] - lcum)                 # decay to chunk end
+    bxh = jnp.einsum("bcqhn,bcqhp->bchnp",
+                     jnp.repeat(bg, hg, axis=3) * (dt * seg)[..., None],
+                     xh)
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_body(carry, inp):
+        st, cd = inp
+        new = carry * cd[:, :, None, None] + st
+        return new, carry
+
+    init_state = jnp.zeros((b_, nheads, n, hp), jnp.float32)
+    final_state, prev_states = lax.scan(
+        scan_body, init_state,
+        (jnp.moveaxis(bxh, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)), unroll=cm.scan_unroll())
+    prev = jnp.moveaxis(prev_states, 0, 1)                  # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         jnp.repeat(cg, hg, axis=3) * jnp.exp(lcum)[..., None],
+                         prev)
+
+    y = y_intra + y_inter + p["D"].astype(jnp.float32)[None, None, None, :, None] * xh
+    y = y.reshape(b_, seq, d_in).astype(x.dtype)
+    y = cm.rms_norm(y * cm.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dp->bsp", y, p["out_proj"].astype(x.dtype))
+    if not return_state:
+        return out
+    rl = real_len or seq
+    kd = p["conv_w"].shape[0]
+    conv_buf = xbc_raw[:, rl - kd:rl, :] if rl >= kd else jnp.pad(
+        xbc_raw[:, :rl, :], ((0, 0), (kd - rl, 0), (0, 0)))
+    return out, (final_state, conv_buf)
+
+
+def ssm_block_naive(p, x, cfg):
+    """Reference: token-by-token recurrence (oracle for the chunked path)."""
+    b_, seq, _ = x.shape
+    state, conv = init_ssm_cache(jnp.float32, cfg, b_)
+    outs = []
+    for i in range(seq):
+        o, (state, conv) = ssm_decode(p, x[:, i:i + 1], cfg, (state, conv))
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+def init_ssm_cache(dtype, cfg, batch: int):
+    s = cfg.ssm
+    d_in, nheads, conv_ch = dims(cfg)
+    state = jnp.zeros((batch, nheads, s.d_state, s.head_dim), jnp.float32)
+    conv = jnp.zeros((batch, s.conv_dim, conv_ch), dtype)
+    return state, conv
+
+
+def ssm_decode(p, x, cfg, cache):
+    """One-token recurrent step.  x: (B, 1, D); cache: (state, conv_buf)."""
+    s = cfg.ssm
+    d_in, nheads, conv_ch = dims(cfg)
+    g, n, hp = s.n_groups, s.d_state, s.head_dim
+    state, conv_buf = cache
+    b_ = x.shape[0]
+
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(x.dtype))
+    z, xs, bb, cc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)[:, 0, :]   # (B, conv_ch)
+    conv_buf = jnp.concatenate(
+        [conv_buf[:, 1:, :], xbc[:, None, :].astype(conv_buf.dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", conv_buf.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = cm.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    xs, bb, cc = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+
+    xh = xs.reshape(b_, nheads, hp)
+    bg = jnp.repeat(bb.reshape(b_, g, n), nheads // g, axis=1)
+    cg = jnp.repeat(cc.reshape(b_, g, n), nheads // g, axis=1)
+    dt = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                    # (B,H)
+
+    state = state * da[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", bg * dt[..., None], xh)
+    y = jnp.einsum("bhn,bhnp->bhp", cg, state) \
+        + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b_, 1, d_in).astype(x.dtype)
+    y = cm.rms_norm(y * cm.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dp->bsp", y, p["out_proj"].astype(x.dtype))
+    return out, (state, conv_buf)

@@ -1,0 +1,79 @@
+"""AdamW with global-norm clipping and a cosine LR schedule.
+
+Pure-jnp pytree implementation (no optax dependency).  The first/second
+moments inherit the parameters' sharding (same tree structure, same
+logical axes), so optimizer state is ZeRO-sharded for free wherever the
+params are FSDP/TP sharded.  ``state_dtype="bfloat16"`` halves optimizer
+memory (recorded as a distributed-optimization trick in DESIGN.md; the
+update math still runs in fp32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5
+                         * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable                 # step -> learning rate
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"   # "bfloat16" halves m/v memory
+
+    def init(self, params):
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params) -> Tuple[Any, Dict, Dict]:
+        """Returns (new_params, new_state, metrics).  All math fp32."""
+        step = state["step"] + 1
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        sdt = jnp.dtype(self.state_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mh = m32 / c1
+            vh = v32 / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        newp = jax.tree.unflatten(treedef, [t[0] for t in flat])
+        newm = jax.tree.unflatten(treedef, [t[1] for t in flat])
+        newv = jax.tree.unflatten(treedef, [t[2] for t in flat])
+        return (newp, {"m": newm, "v": newv, "step": step},
+                {"gnorm": gnorm, "lr": lr})

@@ -1,0 +1,2 @@
+from repro.parallel.rules import (Rules, DEFAULT_RULES, sharding_for,  # noqa: F401
+                                  spec_for, tree_shardings, tree_specs)

@@ -1,0 +1,42 @@
+"""Ambient sharding-rules context.
+
+Model code is mesh-agnostic (it annotates logical axes only), but a few
+GSPMD propagation blind spots -- notably the MoE dispatch buffers, whose
+gather/scatter ops give the partitioner no signal -- need explicit
+``with_sharding_constraint``.  The launcher installs the active ``Rules``
+here; model code asks for a constraint by logical names and gets a no-op
+when no rules are installed (single-device tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+
+_current: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules):
+    tok = _current.set(rules)
+    try:
+        yield
+    finally:
+        _current.reset(tok)
+
+
+def current_rules():
+    return _current.get()
+
+
+def constrain(x, logical_axes):
+    """Apply a sharding constraint by logical axis names (no-op without
+    an installed Rules context)."""
+    r = _current.get()
+    if r is None:
+        return x
+    sh = r.sharding(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, sh)

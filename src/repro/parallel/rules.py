@@ -1,0 +1,128 @@
+"""Sharding-rules engine: logical axes -> mesh axes with divisibility
+fallback.
+
+Models annotate every parameter/activation dim with a *logical* name
+("heads", "d_ff", "vocab", "batch", ...).  This module resolves names to
+mesh axes by priority, subject to two constraints checked per array:
+
+* divisibility -- a dim whose size does not divide the mesh axis extent is
+  left replicated (e.g. qwen2.5's 40 q-heads on a 16-way model axis), and
+* exclusivity -- a mesh axis is used at most once per array.
+
+The fallback makes every (arch x mesh) compile valid without per-arch
+special cases; fallback events are logged (``FALLBACKS``) and surface in
+the roofline as extra all-reduce bytes.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
+
+Axis = Optional[str]
+
+# (logical name, candidate mesh-axis groups in preference order).
+# Names earlier in the list claim mesh axes first within one array.
+DEFAULT_RULES: Tuple[Tuple[str, Tuple[Tuple[str, ...], ...]], ...] = (
+    ("experts", (("model",),)),
+    ("heads", (("model",),)),
+    ("kv_heads", (("model",),)),
+    ("d_ff", (("model",),)),
+    ("vocab", (("model",),)),
+    ("kv_seq", (("model",),)),          # decode-cache fallback: split-S
+    ("batch", (("pod", "data"), ("data",))),
+    ("embed", (("data",),)),            # FSDP (zero-3) weight shard
+    ("lat_y", (("pod", "data"), ("data",))),   # FHP lattice rows
+    ("lat_x", (("model",),)),                  # FHP lattice words
+)
+
+
+class Rules:
+    def __init__(self, mesh: Mesh,
+                 rules: Sequence = DEFAULT_RULES,
+                 fsdp: bool = True,
+                 seq_parallel: bool = False):
+        self.mesh = mesh
+        self.rules: Dict[str, Tuple[Tuple[str, ...], ...]] = dict(rules)
+        if not fsdp:
+            self.rules["embed"] = ()
+        if seq_parallel:
+            # sequence parallelism: the model axis carries the sequence of
+            # activations; block weights replicate on it (vocab/experts
+            # keep TP -- embedding tables are the memory hogs).
+            for name in ("heads", "kv_heads", "d_ff"):
+                self.rules[name] = ()
+            self.rules["seq"] = (("model",),)
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.fallbacks: List[Tuple] = []
+        self._priority = ["seq"] + [name for name, _ in rules]
+
+    def _group_size(self, group: Tuple[str, ...]) -> int:
+        return int(np.prod([self.axis_sizes[a] for a in group]))
+
+    def spec(self, shape: Sequence[int], axes: Sequence[Axis]) -> P:
+        """Resolve one array's logical axes to a PartitionSpec."""
+        assert len(shape) == len(axes), (shape, axes)
+        out: List = [None] * len(axes)
+        used: set = set()
+        order = sorted(
+            range(len(axes)),
+            key=lambda i: (self._priority.index(axes[i])
+                           if axes[i] in self._priority else 10 ** 6))
+        for i in order:
+            name = axes[i]
+            if name is None or name not in self.rules:
+                continue
+            placed = False
+            for group in self.rules[name]:
+                if any(a not in self.axis_sizes for a in group):
+                    continue
+                if any(a in used for a in group):
+                    continue
+                if shape[i] % self._group_size(group) != 0:
+                    continue
+                out[i] = group if len(group) > 1 else group[0]
+                used.update(group)
+                placed = True
+                break
+            if not placed and self.rules[name]:
+                self.fallbacks.append((tuple(shape), tuple(axes), name))
+        return P(*out)
+
+    def sharding(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+
+def spec_for(mesh, shape, axes, rules=DEFAULT_RULES) -> P:
+    return Rules(mesh, rules).spec(shape, axes)
+
+
+def sharding_for(mesh, shape, axes, rules=DEFAULT_RULES) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, shape, axes, rules))
+
+
+def tree_specs(mesh, shapes_tree, axes_tree, rules=DEFAULT_RULES):
+    """Map a (shapes, logical-axes) tree pair to PartitionSpecs.
+
+    ``axes_tree`` mirrors ``shapes_tree`` but each leaf is a *tuple* of
+    logical names; flatten_up_to keeps those tuples intact as leaves.
+    """
+    r = Rules(mesh, rules)
+    flat_shapes, treedef = jax.tree.flatten(shapes_tree)
+    flat_axes = treedef.flatten_up_to(axes_tree)
+    flat_specs = [r.spec(s.shape, a) for s, a in zip(flat_shapes, flat_axes)]
+    return jax.tree.unflatten(treedef, flat_specs)
+
+
+def tree_shardings(mesh, shapes_tree, axes_tree, rules=DEFAULT_RULES):
+    r = Rules(mesh, rules)
+    flat_shapes, treedef = jax.tree.flatten(shapes_tree)
+    flat_axes = treedef.flatten_up_to(axes_tree)
+    flat = [NamedSharding(mesh, r.spec(s.shape, a))
+            for s, a in zip(flat_shapes, flat_axes)]
+    return jax.tree.unflatten(treedef, flat)

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW, analyze_compiled,  # noqa: F401
+                                     collective_bytes, roofline_terms)

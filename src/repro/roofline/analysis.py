@@ -1,0 +1,295 @@
+"""Roofline accounting from compiled XLA artifacts (no hardware needed).
+
+Per (arch x shape x mesh) cell, three terms in *seconds per step*:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth_per_chip
+    collective = collective_bytes_per_device / ICI_link_bandwidth
+
+``compiled.cost_analysis()`` provides per-device FLOPs and bytes (the SPMD
+partitioner has already divided the global program).  Collective bytes are
+not in cost_analysis: we parse the *post-partitioning* HLO text
+(``compiled.as_text()``) and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, per the
+assignment spec.  A wire-bytes estimate (ring-algorithm factors) is also
+reported for context.
+
+Hardware constants (assignment-fixed, TPU v5e): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 / chip
+    hbm_bw: float = 819e9           # B/s per chip
+    ici_bw: float = 50e9            # B/s per link
+
+
+V5E = HW()
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# ``bf16[8,128]{1,0}`` or ``f32[]`` (scalars); captures (dtype, dims).
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# ``<result shapes> opcode(`` with optional -start/-done async suffixes.
+_OP_RE = re.compile(
+    r"=\s*(.*?)\b(" + "|".join(_COLL_OPS) + r")(-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    """Participant count of the op's replica groups (both HLO formats)."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"source_target_pairs=\{(.+?)\}\}?", line)
+    if m:  # collective-permute: pairwise
+        return 2
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum operand bytes per collective op kind from partitioned HLO text.
+
+    The partitioned dialect prints only *result* shapes inline; operand
+    bytes are derived from the result shape and op semantics:
+    all-reduce / all-to-all / collective-permute keep shape, all-gather's
+    operand is result/n, reduce-scatter's operand is result*n (n = replica
+    group size).  Returns {op: {count, operand_bytes, wire_bytes}} plus a
+    "_total" entry; wire_bytes uses ring-algorithm factors.
+    """
+    out: Dict[str, Dict[str, float]] = {
+        op: {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0}
+        for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_seg, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":        # async pair: count the -start only
+            continue
+        shapes = _SHAPE_RE.findall(result_seg)
+        rb = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        n = _group_size(line)
+        operand = {"all-reduce": rb,
+                   "all-gather": rb / max(n, 1),
+                   "reduce-scatter": rb * n,
+                   "all-to-all": rb,
+                   "collective-permute": rb}[op]
+        wire = {"all-reduce": 2 * (n - 1) / n * rb,
+                "all-gather": (n - 1) / n * rb,
+                "reduce-scatter": (n - 1) / n * rb * n,
+                "all-to-all": (n - 1) / n * rb,
+                "collective-permute": rb}[op]
+        out[op]["count"] += 1
+        out[op]["operand_bytes"] += operand
+        out[op]["wire_bytes"] += wire
+    out["_total"] = {
+        "count": sum(v["count"] for v in out.values()),
+        "operand_bytes": sum(v["operand_bytes"] for v in out.values()),
+        "wire_bytes": sum(v["wire_bytes"] for v in out.values()),
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fusion-aware HBM traffic estimate.
+#
+# XLA's cost_analysis "bytes accessed" sums operand+output bytes of EVERY
+# HLO op pre-fusion -- a long elementwise chain that executes as one fused
+# kernel pass is counted once per op, inflating traffic by 1-2 orders of
+# magnitude.  The optimized module text, however, shows the post-fusion
+# instruction graph: fusion internals live in separate computation blocks
+# referenced by ``calls=``/``to_apply=``.  Summing output + operand bytes
+# over *top-level* instructions only (entry, while bodies, conditionals)
+# approximates real HBM traffic: each materialised buffer is written once
+# by its producer and read once per consumer.
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.-]+)\s*=\s*(.*)$")
+_NAME_RE = re.compile(r"%([\w.-]+)")
+_SKIP_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "copy-start", "copy-done")
+
+
+def _computation_blocks(text: str):
+    """Yield (name, [lines]) per computation block in an HLO dump.
+
+    Headers look like ``%name (p0: f32[..]) -> f32[..] {`` or
+    ``ENTRY %main.0 (...) -> ... {``."""
+    name, lines = None, []
+    for line in text.splitlines():
+        stripped = line.strip()
+        if (name is None and stripped.endswith("{")
+                and ("->" in stripped or stripped.startswith("ENTRY"))):
+            m = re.match(r"^(?:ENTRY\s+)?%([\w.$-]+)", stripped)
+            if m:
+                name, lines = m.group(1), []
+            continue
+        if stripped == "}" and name is not None:
+            yield name, lines
+            name, lines = None, []
+        elif name is not None:
+            lines.append(line)
+
+
+# Ops that materialise HBM buffers even under the TPU fusion pipeline.
+_MAJOR_OPS = ("dot", "convolution", "fusion", "custom-call",
+              "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute", "dynamic-slice", "dynamic-update-slice",
+              "gather", "scatter", "concatenate", "pad", "sort", "copy",
+              "transpose", "while", "reduce ", "reduce(")
+
+
+def hbm_bytes_estimate(hlo_text: str, mode: str = "fused") -> float:
+    """HBM traffic estimate (bytes) from optimized HLO text.
+
+    mode="all": every top-level instruction's output + operand bytes --
+    matches XLA's own pre-fusion accounting on the CPU pipeline (an UPPER
+    bound for TPU: the CPU pipeline materialises elementwise chains that
+    the TPU fusion pipeline keeps in registers/VMEM).
+
+    mode="fused": models perfect elementwise fusion -- 2x (write + read)
+    the bytes of buffers that *must* materialise: computation parameters,
+    roots, and major ops (dot / collectives / gather / scatter / dynamic
+    slicing / concatenate / sort / transpose).  A LOWER bound for TPU.
+    The true TPU number lies between the two; EXPERIMENTS.md reports both.
+    """
+    fused = set(re.findall(r"(?:calls|to_apply)=%([\w.-]+)", hlo_text))
+    shapes: Dict[str, float] = {}
+    blocks = list(_computation_blocks(hlo_text))
+    for _, lines in blocks:
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            head = m.group(2).split("(", 1)[0]
+            sh = _SHAPE_RE.findall(head)
+            shapes[m.group(1)] = sum(_shape_bytes(d, s) for d, s in sh)
+
+    total = 0.0
+    for cname, lines in blocks:
+        if cname in fused:
+            continue
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rest = m.group(2)
+            head, _, tail = rest.partition("(")
+            toks = head.strip().split()
+            opcode = toks[-1] if toks else ""  # last token before '('
+            out_b = shapes.get(m.group(1), 0.0)
+            if mode == "fused":
+                is_param = opcode.startswith("parameter")
+                is_root = line.lstrip().startswith("ROOT")
+                is_major = any(opcode.startswith(s.strip("( "))
+                               for s in _MAJOR_OPS)
+                if is_param or is_root or is_major:
+                    total += 2.0 * out_b
+                continue
+            if any(opcode.startswith(s) for s in _SKIP_OPS):
+                continue
+            depth, j = 1, 0
+            for j, ch in enumerate(tail):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            opnames = _NAME_RE.findall(tail[:j])
+            in_b = sum(shapes.get(n, 0.0) for n in opnames)
+            total += out_b + in_b
+    return total
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float,
+                   hw: HW = V5E) -> Dict[str, float]:
+    t_c = flops / hw.peak_flops
+    t_m = bytes_ / hw.hbm_bw
+    t_x = coll_bytes / hw.ici_bw
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "bound": dom, "step_s_lower_bound": max(t_c, t_m, t_x)}
+
+
+def analyze_compiled(compiled, *, model_flops: Optional[float] = None,
+                     chips: int = 1, hw: HW = V5E) -> Dict:
+    """Full per-device roofline record for one compiled executable.
+
+    ``model_flops`` is the *global* useful-model FLOPs per step (6*N*D
+    etc.); the record reports MODEL_FLOPS / (HLO_FLOPs * chips).
+    """
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    text = compiled.as_text()
+    bytes_ = hbm_bytes_estimate(text, mode="fused")
+    bytes_xla = float(ca.get("bytes accessed", 0.0))
+    colls = collective_bytes(text)
+    coll_b = colls["_total"]["operand_bytes"]
+    terms = roofline_terms(flops, bytes_, coll_b, hw)
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception:
+        pass
+
+    rec = {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_,
+        "bytes_xla_prefusion_per_device": bytes_xla,
+        "collective_bytes_per_device": coll_b,
+        "collective_wire_bytes_per_device": colls["_total"]["wire_bytes"],
+        "collectives": {k: v for k, v in colls.items() if k != "_total"
+                        and v["count"]},
+        "terms": terms,
+        "memory_analysis": mem,
+    }
+    if model_flops is not None:
+        hlo_global = flops * chips
+        rec["model_flops_global"] = model_flops
+        rec["model_flops_ratio"] = (model_flops / hlo_global
+                                    if hlo_global else 0.0)
+        rec["roofline_fraction"] = (
+            (model_flops / chips / hw.peak_flops)
+            / terms["step_s_lower_bound"]
+            if terms["step_s_lower_bound"] > 0 else 0.0)
+    return rec

@@ -1,0 +1,62 @@
+"""Dry-run machinery exercised end-to-end in subprocesses (8 fake host
+devices, reduced configs): the same code path that runs the 512-chip
+production sweep."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ENV = {"PYTHONPATH": "src", "DRYRUN_DEVICES": "8",
+       "PATH": "/usr/bin:/bin", "HOME": "/root"}
+
+
+def run_cell(args, timeout=600):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout, env=ENV)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("internlm2-20b", "train_4k"),
+    ("gemma2-27b", "prefill_32k"),
+    ("deepseek-v3-671b", "decode_32k"),
+    ("zamba2-2.7b", "long_500k"),
+])
+def test_dryrun_cells_compile(arch, shape):
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "cell.json")
+        r = run_cell(["--arch", arch, "--shape", shape, "--test-mesh",
+                      "--smoke", "--out", out])
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        rec = json.loads(open(out).read())
+        assert rec["terms"]["bound"] in ("compute", "memory", "collective")
+        assert rec["flops_per_device"] > 0
+        assert rec["compile_s"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_compiles():
+    r = run_cell(["--arch", "qwen2.5-14b", "--shape", "train_4k",
+                  "--test-mesh", "--smoke", "--multi-pod"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "DRYRUN OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_fhp_cell():
+    r = run_cell(["--arch", "fhp-lattice", "--test-mesh",
+                  "--fhp-h", "256", "--fhp-w", "2048"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "bound=memory" in r.stdout  # FHP must be memory-bound
+
+
+@pytest.mark.slow
+def test_dryrun_skips_inapplicable_long_context():
+    r = run_cell(["--arch", "internlm2-20b", "--shape", "long_500k",
+                  "--test-mesh", "--smoke"])
+    assert r.returncode == 0
+    assert "SKIP" in r.stdout

@@ -1,0 +1,90 @@
+"""FHP-III-style rule variant: conservation audit, LUT == boolean algebra,
+and the new mass-3 conversion channels actually fire."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import boolean, rules
+
+
+def test_fhp3_lut_builds_and_conserves():
+    lut = rules.build_lut("fhp3")  # conservation audited inside
+    assert lut.shape == (2, 256)
+    assert not np.array_equal(lut, rules.build_lut("fhp2"))
+
+
+def test_fhp3_pair_rest_fusion():
+    """head-on pair + rest -> symmetric triple (chirality selects which)."""
+    lut = rules.build_lut("fhp3")
+    s = (1 << 0) | (1 << 3) | rules.REST_MASK
+    o0, o1 = int(lut[0, s]), int(lut[1, s])
+    assert o0 == 0b010101           # T0 = {0,2,4}, rest cleared
+    assert o1 == 0b101010           # T1 = {1,3,5}
+    assert rules.mass_of(o0) == rules.mass_of(s) == 3
+    assert rules.momentum_of(o0) == (0, 0)
+
+
+def test_fhp3_triple_fission():
+    """triple (no rest): c0 rotates, c1 splits into pair + rest."""
+    lut = rules.build_lut("fhp3")
+    t0 = 0b010101
+    assert int(lut[0, t0]) == 0b101010                       # rotate
+    assert int(lut[1, t0]) == ((1 << 0) | (1 << 3) | rules.REST_MASK)
+    # under FHP-II the same state never gains a rest particle
+    lut2 = rules.build_lut("fhp2")
+    assert not (int(lut2[1, t0]) & rules.REST_MASK)
+
+
+@pytest.mark.parametrize("chi_val", [0, 1])
+def test_fhp3_lut_equals_boolean(chi_val):
+    lut = rules.build_lut("fhp3")
+    states = jnp.arange(256, dtype=jnp.int32)[None, :].astype(jnp.uint8)
+    chi = jnp.full(states.shape, chi_val, jnp.uint8)
+    planes = [((states >> i) & 1) for i in range(8)]
+    outp = boolean.collide_planes(planes, chi, variant="fhp3")
+    out_bool = sum((outp[i].astype(jnp.uint8) << i) for i in range(8))
+    want = lut[chi_val][np.arange(256)]
+    assert np.array_equal(np.asarray(out_bool)[0], want)
+
+
+def test_fhp3_adds_rest_conversion_channels():
+    """FHP-III's distinction: collisions that convert between moving and
+    rest particles within the mass-3 class (pair+rest <-> triple).  Count
+    transitions where the rest bit flips for 2- and 3-mover states."""
+    def conversions(variant):
+        lut = rules.build_lut(variant)
+        n = 0
+        for c in (0, 1):
+            for s in range(128):
+                movers = bin(s & 0x3F).count("1")
+                rest = bool(s & rules.REST_MASK)
+                mass3 = (movers == 2 and rest) or (movers == 3 and not rest)
+                if mass3 and (int(lut[c, s]) ^ s) & rules.REST_MASK:
+                    n += 1
+        return n
+    assert conversions("fhp2") == 0
+    assert conversions("fhp3") > 0
+
+
+def test_fhp3_full_step_equivalence_across_paths():
+    """byte/LUT == bit-plane boolean == Pallas kernel under fhp3."""
+    import jax.numpy as jnp2
+    from repro.core import bitplane, byte_step, prng
+    from repro.kernels.fhp_step.ops import fhp_step_pallas
+
+    h, w = 16, 64
+    s = jnp2.asarray(byte_step.make_channel(h, w, density=0.35, seed=9))
+    p = bitplane.pack(s)
+    chi_w = prng.chirality_words((h, w // 32), t=3)
+    shifts = jnp2.arange(32, dtype=jnp2.uint32)
+    chi_b = ((chi_w[..., None] >> shifts) & 1).reshape(h, w).astype(jnp2.uint8)
+
+    out_byte = byte_step.step_bytes(s, 3, chi=chi_b, variant="fhp3")
+    out_plane = bitplane.step_planes(p, 3, chi=chi_w, variant="fhp3")
+    out_kernel = fhp_step_pallas(p, 3, variant="fhp3")
+
+    assert bool((bitplane.unpack(out_plane) == out_byte).all())
+    assert bool((out_kernel == out_plane).all())
+    # and fhp3 dynamics genuinely differ from fhp2
+    out2 = bitplane.step_planes(p, 3, chi=chi_w, variant="fhp2")
+    assert not bool((out_plane == out2).all())

@@ -1,0 +1,78 @@
+"""Pallas fused FHP kernel vs the pure-jnp oracle (interpret mode):
+shape sweep x block sizes x forcing x RNG placement x offsets."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitplane, byte_step
+from repro.kernels.fhp_step.ops import (fhp_step_pallas, pick_block_rows,
+                                        run_pallas, vmem_bytes)
+from repro.kernels.fhp_step.ref import fhp_step_ref
+
+
+def state(h, w, seed=0):
+    return bitplane.pack(jnp.asarray(
+        byte_step.make_channel(h, w, density=0.3, seed=seed)))
+
+
+@pytest.mark.parametrize("h,w", [(8, 32), (16, 64), (32, 128), (64, 256),
+                                 (8, 1024)])
+def test_kernel_shape_sweep(h, w):
+    p = state(h, w, seed=h)
+    out_k = fhp_step_pallas(p, 0)
+    out_r = fhp_step_ref(p, 0)
+    assert bool((out_k == out_r).all()), (h, w)
+
+
+@pytest.mark.parametrize("bh", [1, 2, 4, 8, 16])
+def test_kernel_block_rows(bh):
+    p = state(16, 64)
+    out_k = fhp_step_pallas(p, 3, block_rows=bh)
+    assert bool((out_k == fhp_step_ref(p, 3)).all()), bh
+
+
+@pytest.mark.parametrize("p_force", [0.0, 0.05, 0.3, 1.0])
+@pytest.mark.parametrize("rng_in_kernel", [True, False])
+def test_kernel_forcing_and_rng_placement(p_force, rng_in_kernel):
+    p = state(16, 64, seed=2)
+    out_k = fhp_step_pallas(p, 11, p_force=p_force,
+                            rng_in_kernel=rng_in_kernel)
+    out_r = fhp_step_ref(p, 11, p_force=p_force)
+    assert bool((out_k == out_r).all())
+
+
+@pytest.mark.parametrize("y0,xw0", [(0, 0), (16, 2), (33, 7)])
+def test_kernel_shard_offsets(y0, xw0):
+    """Odd y0 exercises the parity offset; any offset shifts the RNG."""
+    p = state(16, 64, seed=3)
+    out_k = fhp_step_pallas(p, 5, p_force=0.1, y0=y0, xw0=xw0)
+    out_r = fhp_step_ref(p, 5, p_force=0.1, y0=y0, xw0=xw0)
+    assert bool((out_k == out_r).all())
+
+
+def test_kernel_multi_step():
+    p = state(16, 64, seed=4)
+    out_k = run_pallas(p, 12, p_force=0.02)
+    out_r = bitplane.run_planes(p, 12, p_force=0.02)
+    assert bool((out_k == out_r).all())
+
+
+def test_kernel_conserves_mass():
+    p = state(32, 128, seed=5)
+    m0 = int(bitplane.density_total(p))
+    p2 = run_pallas(p, 10, p_force=0.1)
+    assert int(bitplane.density_total(p2)) == m0
+
+
+def test_block_picker_respects_vmem():
+    bh = pick_block_rows(4096, 512)
+    assert 4096 % bh == 0
+    assert vmem_bytes(bh, 512) <= 8 * 2 ** 20
+    with pytest.raises(ValueError):
+        pick_block_rows(7, 10 ** 7)  # nothing fits
+
+
+def test_kernel_rejects_bad_height():
+    p = state(16, 64)
+    with pytest.raises(AssertionError):
+        fhp_step_pallas(p, 0, block_rows=5)  # 16 % 5 != 0

@@ -1,0 +1,61 @@
+"""Counter-based RNG: statistics, shard invariance, Bernoulli quantisation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import prng
+
+
+def test_chirality_mean_half():
+    w = prng.chirality_words((64, 64), t=0)
+    bits = jnp.unpackbits(jnp.asarray(np.asarray(w).view(np.uint8)))
+    assert abs(float(bits.mean()) - 0.5) < 0.01
+
+
+@pytest.mark.parametrize("p", [0.1, 0.25, 0.5, 0.9])
+def test_bernoulli_words_mean(p):
+    w = prng.bernoulli_words((128, 64), t=1, p=p)
+    bits = np.unpackbits(np.asarray(w).view(np.uint8))
+    assert abs(bits.mean() - p) < 0.01, p
+
+
+def test_bernoulli_extremes():
+    assert int(prng.bernoulli_words((4, 4), 0, 0.0).sum()) == 0
+    assert (np.asarray(prng.bernoulli_words((4, 4), 0, 1.0))
+            == 0xFFFFFFFF).all()
+
+
+def test_word_stream_shard_invariance():
+    """A shard with offsets reproduces the global stream exactly."""
+    full = prng.word_u32((32, 16), t=5, salt=0x11)
+    part = prng.word_u32((8, 4), t=5, salt=0x11, y0=16, xw0=8)
+    assert bool((full[16:24, 8:12] == part).all())
+
+
+def test_bernoulli_shard_invariance():
+    full = prng.bernoulli_words((32, 16), t=9, p=0.3)
+    part = prng.bernoulli_words((8, 4), t=9, p=0.3, y0=4, xw0=12)
+    assert bool((full[4:12, 12:16] == part).all())
+
+
+def test_at_variants_match_offsets():
+    rows = (jnp.arange(8) + 16)[:, None]
+    cols = (jnp.arange(4) + 8)[None, :]
+    a = prng.word_u32_at(rows, cols, t=5, salt=0x11)
+    b = prng.word_u32((8, 4), t=5, salt=0x11, y0=16, xw0=8)
+    assert bool((a == b).all())
+    c = prng.bernoulli_words_at(rows, cols, t=5, p=0.3)
+    d = prng.bernoulli_words((8, 4), t=5, p=0.3, y0=16, xw0=8)
+    assert bool((c == d).all())
+
+
+def test_time_decorrelation():
+    a = prng.word_u32((16, 16), t=0, salt=1)
+    b = prng.word_u32((16, 16), t=1, salt=1)
+    assert not bool((a == b).all())
+
+
+def test_quantize_p():
+    assert prng.quantize_p(0.0) == 0
+    assert prng.quantize_p(1.0) == 1 << prng.BERNOULLI_BITS
+    assert prng.quantize_p(0.5) == 1 << (prng.BERNOULLI_BITS - 1)

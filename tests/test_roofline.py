@@ -1,0 +1,81 @@
+"""Roofline parser unit tests: collective-bytes extraction, fused-traffic
+estimate, term classification."""
+import textwrap
+
+from repro.roofline import collective_bytes, roofline_terms
+from repro.roofline.analysis import hbm_bytes_estimate
+
+HLO = textwrap.dedent("""
+    HloModule test, num_partitions=8
+
+    %region_0 (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %add = f32[] add(%a, %b)
+    }
+
+    %fused_body (p0: f32[128,64]) -> f32[128,64] {
+      %p0 = f32[128,64]{1,0} parameter(0)
+      %c = f32[128,64]{1,0} exponential(%p0)
+      ROOT %m = f32[128,64]{1,0} multiply(%c, %c)
+    }
+
+    ENTRY %main (x: f32[128,64], w: f32[64,32]) -> f32[128,32] {
+      %x = f32[128,64]{1,0} parameter(0)
+      %w = f32[64,32]{1,0} parameter(1)
+      %f = f32[128,64]{1,0} fusion(%x), kind=kLoop, calls=%fused_body
+      %dot = f32[128,32]{1,0} dot(%f, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[128,32]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%region_0
+      %ag = f32[128,128]{1,0} all-gather(%ar), channel_id=2, replica_groups=[2,4]<=[8], dimensions={1}
+      %rs = f32[32,32]{1,0} reduce-scatter(%ag), channel_id=3, replica_groups=[2,4]<=[8], dimensions={0}, to_apply=%region_0
+      %cp = f32[128,32]{1,0} collective-permute(%ar), channel_id=4, source_target_pairs={{0,1},{1,0}}
+      ROOT %out = f32[128,32]{1,0} add(%cp, %ar)
+    }
+""")
+
+
+def test_collective_bytes_by_kind():
+    cb = collective_bytes(HLO)
+    assert cb["all-reduce"]["count"] == 1
+    assert cb["all-reduce"]["operand_bytes"] == 128 * 32 * 4
+    # all-gather operand = result / group size (4)
+    assert cb["all-gather"]["operand_bytes"] == 128 * 128 * 4 / 4
+    # reduce-scatter operand = result * group size
+    assert cb["reduce-scatter"]["operand_bytes"] == 32 * 32 * 4 * 4
+    assert cb["collective-permute"]["operand_bytes"] == 128 * 32 * 4
+    assert cb["_total"]["count"] == 4
+    assert cb["_total"]["wire_bytes"] > 0
+
+
+def test_fused_traffic_counts_major_ops_only():
+    est = hbm_bytes_estimate(HLO, mode="fused")
+    # parameters (x, w), fusion out, dot out, 4 collectives, root out;
+    # the exponential/multiply INSIDE the fusion body must not count.
+    expected_buffers = (128 * 64 + 64 * 32        # params
+                       + 128 * 64                 # fusion output
+                       + 128 * 32                 # dot
+                       + 128 * 32 + 128 * 128 + 32 * 32 + 128 * 32  # colls
+                       + 128 * 32)                # root
+    assert est == 2 * 4 * expected_buffers
+
+
+def test_fused_skips_elementwise_chains():
+    """An extra top-level elementwise op raises 'all' but not 'fused'."""
+    extra = HLO.replace(
+        "ROOT %out = f32[128,32]{1,0} add(%cp, %ar)",
+        "%t1 = f32[128,32]{1,0} tanh(%ar)\n"
+        "  ROOT %out = f32[128,32]{1,0} add(%cp, %t1)")
+    assert hbm_bytes_estimate(extra, mode="fused") == \
+        hbm_bytes_estimate(HLO, mode="fused")
+    assert hbm_bytes_estimate(extra, mode="all") > \
+        hbm_bytes_estimate(HLO, mode="all")
+
+
+def test_roofline_terms_classification():
+    t = roofline_terms(197e12, 10e9, 1e9)   # 1 s compute, tiny rest
+    assert t["bound"] == "compute"
+    t = roofline_terms(1e9, 819e9, 1e9)     # 1 s memory
+    assert t["bound"] == "memory"
+    t = roofline_terms(1e9, 1e9, 50e9)      # 1 s collective
+    assert t["bound"] == "collective"
+    assert t["step_s_lower_bound"] == 1.0

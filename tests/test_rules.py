@@ -1,0 +1,85 @@
+"""FHP-II rule table: exhaustive conservation + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rules
+
+
+def test_lut_shape_and_determinism():
+    lut = rules.build_lut()
+    assert lut.shape == (2, 256)
+    assert lut.dtype == np.uint8
+    assert np.array_equal(lut, rules.build_lut())
+
+
+@pytest.mark.parametrize("chi", [0, 1])
+def test_fluid_conservation_exhaustive(chi):
+    lut = rules.build_lut()
+    for s in range(128):  # fluid states (bit 7 clear)
+        o = int(lut[chi, s])
+        assert not (o & rules.SOLID_MASK)
+        assert rules.mass_of(o) == rules.mass_of(s), (s, o)
+        assert rules.momentum_of(o) == rules.momentum_of(s), (s, o)
+
+
+@pytest.mark.parametrize("chi", [0, 1])
+def test_solid_bounce_back_exhaustive(chi):
+    lut = rules.build_lut()
+    for s in range(128, 256):
+        o = int(lut[chi, s])
+        assert o & rules.SOLID_MASK
+        px, py = rules.momentum_of(s)
+        assert rules.momentum_of(o) == (-px, -py), (s, o)
+        assert rules.mass_of(o & 0x7F) == rules.mass_of(s & 0x7F)
+        # bounce-back is an involution: two applications restore the state
+        assert int(lut[chi, o]) == s
+
+
+def test_collisions_change_state_for_head_on():
+    """The table must actually scatter: head-on pairs rotate."""
+    lut = rules.build_lut()
+    for i in range(3):
+        s = (1 << i) | (1 << rules.opposite(i))
+        assert int(lut[0, s]) != s
+        assert int(lut[1, s]) != s
+        assert int(lut[0, s]) != int(lut[1, s])  # chirality matters
+
+
+def test_three_body_symmetric():
+    lut = rules.build_lut()
+    s = 0b010101
+    assert int(lut[0, s]) == 0b101010
+    assert int(lut[0, 0b101010]) == 0b010101
+
+
+def test_rest_exchange_mass_two():
+    lut = rules.build_lut()
+    for i in range(6):
+        s = (1 << i) | rules.REST_MASK
+        o = int(lut[0, s])
+        assert o != s
+        assert rules.mass_of(o) == 2
+        assert not (o & rules.REST_MASK)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 1))
+def test_conservation_property(s, chi):
+    lut = rules.build_lut()
+    o = int(lut[chi, s])
+    assert rules.mass_of(o & 0x7F) == rules.mass_of(s & 0x7F)
+    if s & rules.SOLID_MASK:
+        px, py = rules.momentum_of(s)
+        assert rules.momentum_of(o) == (-px, -py)
+    else:
+        assert rules.momentum_of(o) == rules.momentum_of(s)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 255))
+def test_lut_flat_consistency(s):
+    flat = rules.lut_flat()
+    lut = rules.build_lut()
+    assert flat[s] == lut[0, s]
+    assert flat[256 + s] == lut[1, s]
