@@ -1,47 +1,80 @@
 """Kernel-level microbenchmark: per-step cost of the fused FHP update as a
 function of block height and RNG placement, plus the VMEM footprint the
-BlockSpec tiling claims.  Wall-clock here is the *oracle* path (interpret
-Pallas measures Python); the structural numbers (VMEM bytes, HBM traffic
-per site) are the TPU-relevant output.
+BlockSpec tiling claims and the (block_rows, steps_per_launch) point the
+autotuner picks.  Wall-clock here is the *oracle* path (interpret Pallas
+measures Python); the structural numbers (VMEM bytes, HBM traffic per
+site) are the TPU-relevant output.  ``bench_temporal`` sweeps the
+temporal-blocking axis itself.
 """
 from __future__ import annotations
 
+import sys
 import time
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bitplane, byte_step
-from repro.kernels.fhp_step.ops import pick_block_rows, vmem_bytes
+from repro.kernels.fhp_step.ops import (autotune_launch, hbm_bytes_per_site,
+                                        pick_block_rows, vmem_bytes)
 
 H, W = 1024, 4096
 WD = W // 32
+SMOKE_H, SMOKE_W = 64, 1024
 
 
-def main():
+def main(smoke: bool | None = None) -> List[Dict]:
+    backend = jax.default_backend()
+    if smoke is None:
+        smoke = False
+    h, w = (SMOKE_H, SMOKE_W) if smoke else (H, W)
+    wd_full = w // 32
+    steps = 2 if smoke else 5
     planes = bitplane.pack(jnp.asarray(
-        byte_step.make_channel(H, W, density=0.3, seed=0)))
+        byte_step.make_channel(h, w, density=0.3, seed=0)))
+    records: List[Dict] = []
 
     @jax.jit
     def oracle(p):
-        return bitplane.run_planes(p, 5, p_force=0.01)
+        return bitplane.run_planes(p, steps, p_force=0.01)
 
     oracle(planes).block_until_ready()
     t0 = time.perf_counter()
     oracle(planes).block_until_ready()
     dt = time.perf_counter() - t0
     print("metric,value,unit")
-    print(f"oracle_step,{dt / 5 * 1e3:.2f},ms")
-    print(f"oracle_mups,{H * W * 5 / dt / 1e6:.1f},Mups")
+    print(f"oracle_step,{dt / steps * 1e3:.2f},ms")
+    mups = h * w * steps / dt / 1e6
+    print(f"oracle_mups,{mups:.1f},Mups")
+    records.append({"bench": "kernel", "impl": "oracle-jnp",
+                    "backend": backend, "block_rows": None, "T": 1, "B": 1,
+                    "sites_per_sec": mups * 1e6, "steps": steps,
+                    "lattice": [h, w], "smoke": smoke})
 
-    for wd in (128, 512, 2048, WD):
-        bh = pick_block_rows(H, wd)
+    for wd in (128, 512, 2048, wd_full):
+        bh = pick_block_rows(h, wd)
+        bh_t, t_launch = autotune_launch(h, wd)
         print(f"block_rows(wd={wd}),{bh},rows")
         print(f"vmem_bytes(wd={wd}),{vmem_bytes(bh, wd)},B")
+        print(f"autotune(wd={wd}),(bh={bh_t} T={t_launch}),config")
+        # Structural record for a hypothetical per-device row width wd --
+        # no lattice/wall-clock fields, they would contradict wd.
+        records.append({"bench": "kernel", "impl": "pallas-fused",
+                        "backend": backend, "wd": wd, "block_rows": bh_t,
+                        "T": t_launch, "B": 1, "sites_per_sec": None,
+                        "vmem_bytes": vmem_bytes(bh_t, wd, t_launch),
+                        "model_hbm_bytes_per_site":
+                            hbm_bytes_per_site(bh_t, t_launch),
+                        "lattice": None, "smoke": smoke})
     # HBM traffic of the fused kernel: one read + one write of 8 planes
     print(f"hbm_bytes_per_site,{2 * 8 * 4 / 32.0},B")
     print(f"hbm_bytes_per_site_unfused,{2 * 2 * 8 * 4 / 32.0},B")
+    bh_t, t_launch = autotune_launch(h, wd_full)
+    print(f"hbm_bytes_per_site_temporal,"
+          f"{hbm_bytes_per_site(bh_t, t_launch):.4f},B")
+    return records
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke=True if "--smoke" in sys.argv[1:] else None)

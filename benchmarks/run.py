@@ -1,25 +1,65 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run            # full sweep
+    PYTHONPATH=src python -m benchmarks.run --smoke    # tiny CI profile
 
-Table 1  -> bench_table1 (Mups per implementation tier)
-Fig. 9   -> bench_fig9   (speedup over sequential analogue + v5e projection)
-Fig. 10  -> bench_fig10  (USD/Mups, Watt/Mups)
-kernel   -> bench_kernel (fused-kernel structure: blocks, VMEM, B/site)
+Table 1  -> bench_table1  (Mups per implementation tier)
+Fig. 9   -> bench_fig9    (speedup over sequential analogue + v5e projection)
+Fig. 10  -> bench_fig10   (USD/Mups, Watt/Mups)
+kernel   -> bench_kernel  (fused-kernel structure: blocks, VMEM, B/site)
+temporal -> bench_temporal (steps-per-launch x ensemble-lane sweep)
+
+The kernel-shaped benches (kernel, temporal) also return machine-readable
+records; this driver persists them to ``BENCH_kernel.json`` --
+site-updates/sec per ``(backend, block_rows, T, B)`` -- so the perf
+trajectory is tracked across PRs.  ``--smoke`` runs the record-producing
+benches on tiny lattices (interpret mode on CPU) so CI gets the same JSON
+shape in seconds.
 """
 from __future__ import annotations
 
+import json
+import platform
+import sys
 import time
 
+BENCH_JSON = "BENCH_kernel.json"
 
-def main() -> None:
-    from benchmarks import bench_fig9, bench_fig10, bench_kernel, bench_table1
-    for name, mod in [("table1", bench_table1), ("fig9", bench_fig9),
-                      ("fig10", bench_fig10), ("kernel", bench_kernel)]:
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    from benchmarks import (bench_fig9, bench_fig10, bench_kernel,
+                            bench_table1, bench_temporal)
+    records = []
+    paper_benches = [] if smoke else [
+        ("table1", bench_table1), ("fig9", bench_fig9),
+        ("fig10", bench_fig10)]
+    for name, mod in paper_benches:
         print(f"== {name} ==")
         t0 = time.time()
         mod.main()
         print(f"-- {name} done in {time.time() - t0:.1f}s --\n")
+    for name, mod in [("kernel", bench_kernel), ("temporal", bench_temporal)]:
+        print(f"== {name} ==")
+        t0 = time.time()
+        records.extend(mod.main(smoke=smoke or None) or [])
+        print(f"-- {name} done in {time.time() - t0:.1f}s --\n")
+
+    import jax
+    # bench_temporal auto-degrades to the smoke profile on non-TPU
+    # backends even without --smoke, so the per-record "smoke"/"lattice"
+    # fields are authoritative; meta only records what was requested.
+    out = {"meta": {"backend": jax.default_backend(),
+                    "jax": jax.__version__,
+                    "python": platform.python_version(),
+                    "smoke_requested": smoke,
+                    "smoke_profiles_present":
+                        sorted({bool(r.get("smoke")) for r in records})},
+           "records": records}
+    with open(BENCH_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {len(records)} records -> {BENCH_JSON}")
 
 
 if __name__ == "__main__":

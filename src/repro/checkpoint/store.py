@@ -34,7 +34,8 @@ _SAFE = re.compile(r"[^A-Za-z0-9_.-]")
 
 
 def _flatten(tree):
-    flat = jax.tree.flatten_with_path(tree)[0]
+    # jax.tree.flatten_with_path only exists on newer jax releases.
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
         key = "/".join(_SAFE.sub("_", str(getattr(p, "key", getattr(p, "idx", p))))

@@ -11,6 +11,12 @@ register file.
 Layout: ``planes`` is ``(8, H, W // 32)`` uint32; bit ``b`` of word ``w`` in
 row ``y`` is node ``(y, 32 * w + b)`` (little-endian bit order along x).
 Plane order matches the byte bits: 0..5 moving, 6 rest, 7 solid.
+
+Every stepper and observable also accepts leading batch axes
+(``(B, 8, H, W // 32)`` ensemble lanes): the update is per-lane, and the
+RNG counters do not include the lane index, so each lane is bit-identical
+to the unbatched reference at the same ``(t, y0, xw0)`` (common random
+numbers across the ensemble).
 """
 from __future__ import annotations
 
@@ -27,25 +33,27 @@ _U32 = jnp.uint32
 
 
 def pack(state: jnp.ndarray) -> jnp.ndarray:
-    """(H, W) uint8 bytes -> (8, H, W//32) uint32 planes.  W % 32 == 0."""
-    h, w = state.shape
+    """(..., H, W) uint8 bytes -> (..., 8, H, W//32) uint32 planes.
+    W % 32 == 0; leading axes are ensemble lanes."""
+    *lead, h, w = state.shape
     assert w % WORD == 0, f"W={w} must be a multiple of {WORD}"
     weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=_U32))
     planes = []
     for i in range(8):
-        bits = ((state >> i) & 1).astype(_U32).reshape(h, w // WORD, WORD)
+        bits = ((state >> i) & 1).astype(_U32).reshape(
+            *lead, h, w // WORD, WORD)
         planes.append((bits * weights).sum(axis=-1, dtype=_U32))
-    return jnp.stack(planes)
+    return jnp.stack(planes, axis=-3)
 
 
 def unpack(planes: jnp.ndarray) -> jnp.ndarray:
-    """(8, H, W//32) uint32 planes -> (H, W) uint8 bytes."""
-    _, h, wd = planes.shape
+    """(..., 8, H, W//32) uint32 planes -> (..., H, W) uint8 bytes."""
+    *lead, _, h, wd = planes.shape
     shifts = jnp.arange(WORD, dtype=_U32)
-    state = jnp.zeros((h, wd * WORD), dtype=jnp.uint8)
+    state = jnp.zeros((*lead, h, wd * WORD), dtype=jnp.uint8)
     for i in range(8):
-        bits = ((planes[i][..., None] >> shifts) & 1).astype(jnp.uint8)
-        state = state | (bits.reshape(h, wd * WORD) << i)
+        bits = ((planes[..., i, :, :, None] >> shifts) & 1).astype(jnp.uint8)
+        state = state | (bits.reshape(*lead, h, wd * WORD) << i)
     return state
 
 
@@ -78,21 +86,27 @@ def stream_planes(planes: jnp.ndarray, row0=0) -> jnp.ndarray:
     even = parity == 0
     out = [None] * 8
     for k in range(rules.N_DIR):
-        p = planes[k]
+        p = planes[..., k, :, :]
         (dx0, dy), (dx1, _) = rules.OFFSETS[k]
         if dx0 == dx1:
             moved = shift_x(p, dx0)
         else:
             moved = jnp.where(even, shift_x(p, dx0), shift_x(p, dx1))
         out[k] = jnp.roll(moved, dy, axis=-2) if dy else moved
-    out[rules.REST_BIT] = planes[rules.REST_BIT]
-    out[rules.SOLID_BIT] = planes[rules.SOLID_BIT]
-    return jnp.stack(out)
+    out[rules.REST_BIT] = planes[..., rules.REST_BIT, :, :]
+    out[rules.SOLID_BIT] = planes[..., rules.SOLID_BIT, :, :]
+    return jnp.stack(out, axis=-3)
+
+
+def _as_plane_list(planes: jnp.ndarray) -> List[jnp.ndarray]:
+    """Split the plane axis (-3) into a list, preserving batch axes."""
+    return [planes[..., k, :, :] for k in range(8)]
 
 
 def collide(planes: jnp.ndarray, chi: jnp.ndarray,
             variant: str = "fhp2") -> jnp.ndarray:
-    return jnp.stack(boolean.collide_planes(list(planes), chi, variant))
+    return jnp.stack(boolean.collide_planes(_as_plane_list(planes), chi,
+                                            variant), axis=-3)
 
 
 def step_planes(planes: jnp.ndarray, t, p_force: float = 0.0,
@@ -114,7 +128,7 @@ def step_planes(planes: jnp.ndarray, t, p_force: float = 0.0,
     if p_force or accel is not None:
         if accel is None:
             accel = prng.bernoulli_words(shape_words, t, p_force, y0=y0, xw0=xw0)
-        s = jnp.stack(boolean.force_planes(list(s), accel))
+        s = jnp.stack(boolean.force_planes(_as_plane_list(s), accel), axis=-3)
     return s
 
 
@@ -130,19 +144,22 @@ def run_planes(planes: jnp.ndarray, steps: int, p_force: float = 0.0,
 # ---------------------------------------------------------------------------
 
 def density_total(planes: jnp.ndarray) -> jnp.ndarray:
-    """Total particle count (moving + rest)."""
-    n = jnp.zeros((), jnp.int64) if jax.config.jax_enable_x64 else jnp.zeros((), jnp.int32)
+    """Total particle count (moving + rest); per-lane for batched planes."""
+    dt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    n = jnp.zeros(planes.shape[:-3], dt)
     for i in range(7):
-        n = n + jax.lax.population_count(planes[i]).sum(dtype=n.dtype)
+        n = n + jax.lax.population_count(
+            planes[..., i, :, :]).sum(axis=(-2, -1), dtype=dt)
     return n
 
 
 def momentum_total(planes: jnp.ndarray):
-    """(sum px2, sum py) over the lattice."""
-    px2 = jnp.zeros((), jnp.int32)
-    py = jnp.zeros((), jnp.int32)
+    """(sum px2, sum py) over the lattice; per-lane for batched planes."""
+    px2 = jnp.zeros(planes.shape[:-3], jnp.int32)
+    py = jnp.zeros(planes.shape[:-3], jnp.int32)
     for i in range(rules.N_DIR):
-        c = jax.lax.population_count(planes[i]).sum(dtype=jnp.int32)
+        c = jax.lax.population_count(
+            planes[..., i, :, :]).sum(axis=(-2, -1), dtype=jnp.int32)
         px2 = px2 + c * int(rules.CX2[i])
         py = py + c * int(rules.CY[i])
     return px2, py
@@ -150,13 +167,14 @@ def momentum_total(planes: jnp.ndarray):
 
 def row_velocity(planes: jnp.ndarray) -> jnp.ndarray:
     """Mean x-velocity per row (for Poiseuille profiles), float32."""
-    px2 = jnp.zeros(planes.shape[-2:], jnp.int32)
-    n = jnp.zeros(planes.shape[-2:], jnp.int32)
+    px2 = jnp.zeros(planes.shape[:-3] + planes.shape[-2:], jnp.int32)
+    n = jnp.zeros(planes.shape[:-3] + planes.shape[-2:], jnp.int32)
     for i in range(rules.N_DIR):
-        c = jax.lax.population_count(planes[i]).astype(jnp.int32)
+        c = jax.lax.population_count(planes[..., i, :, :]).astype(jnp.int32)
         px2 = px2 + c * int(rules.CX2[i])
         n = n + c
-    n = n + jax.lax.population_count(planes[rules.REST_BIT]).astype(jnp.int32)
+    n = n + jax.lax.population_count(
+        planes[..., rules.REST_BIT, :, :]).astype(jnp.int32)
     mp = jnp.sum(px2, axis=-1).astype(jnp.float32) / 2.0
     mn = jnp.maximum(jnp.sum(n, axis=-1).astype(jnp.float32), 1e-9)
     return mp / mn

@@ -35,10 +35,37 @@ from repro.core import bitplane, prng
 
 Axes = Union[str, Tuple[str, ...]]
 
+# ``jax.shard_map`` (with check_vma) only exists on newer jax; older
+# releases ship it as ``jax.experimental.shard_map`` (with check_rep).
+# Replication checking is off either way: pallas_call's out_shape carries
+# no replication metadata; correctness is established by the bit-exactness
+# tests.
+if hasattr(jax, "shard_map"):
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _experimental_smap
 
-def lattice_spec(y_axes: Axes = ("data",), x_axis: str = "model") -> P:
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _experimental_smap(f, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, check_rep=False)
+
+if hasattr(lax, "axis_size"):
+    _axis_size = lax.axis_size
+else:
+    def _axis_size(axes):
+        return lax.psum(1, axes)
+
+
+def lattice_spec(y_axes: Axes = ("data",), x_axis: str = "model",
+                 batched: bool = False) -> P:
     """PartitionSpec of a (8, H, Wd) plane stack: rows over y_axes, words
-    over x_axis, the 8 planes replicated (they live together per node)."""
+    over x_axis, the 8 planes replicated (they live together per node).
+    ``batched`` prepends a replicated ensemble-lane axis for
+    (B, 8, H, Wd) stacks."""
+    if batched:
+        return P(None, None, y_axes, x_axis)
     return P(None, y_axes, x_axis)
 
 
@@ -49,27 +76,30 @@ def _ring(n: int, up: bool):
 
 def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                          x_axis: str = "model", p_force: float = 0.0,
-                         depth: int = 1, use_pallas: bool = False):
+                         depth: int = 1, use_pallas: bool = False,
+                         batched: bool = False):
     """Build ``step(planes, t) -> planes`` advancing ``depth`` global FHP
     steps per halo exchange under ``shard_map``.
 
     ``use_pallas`` runs the local update with the fused Pallas kernel
-    (depth 1 only: the kernel's in-kernel RNG uses linear counters, which
-    are exact for the interior cells a shard owns; depth > 1 needs correct
-    RNG in the halo region too, which the jnp path provides via modular
-    coordinate arrays).
+    (depth 1 only: an exchange-free multi-step needs RNG draws for halo
+    cells of the *neighbour's* rows, which the kernel's mod-local-H
+    counters cannot express; the jnp path provides them via modular global
+    coordinate arrays).  ``batched`` steps a (B, 8, H, Wd) ensemble stack
+    (lanes replicated over the mesh, sharded in H/Wd like the unbatched
+    case).
 
     The returned function is shard_map'ed but not jitted; callers compose it
     (e.g. ``lax.fori_loop`` over exchanges) and jit the whole program.
     """
     assert 1 <= depth <= 31, "x halo is one 32-node word -> depth <= 31"
     assert not (use_pallas and depth != 1), "pallas local step: depth == 1"
-    spec = lattice_spec(y_axes, x_axis)
+    spec = lattice_spec(y_axes, x_axis, batched=batched)
 
     def chunk(planes: jnp.ndarray, t) -> jnp.ndarray:
-        ny, nx = lax.axis_size(y_axes), lax.axis_size(x_axis)
+        ny, nx = _axis_size(y_axes), _axis_size(x_axis)
         iy, ix = lax.axis_index(y_axes), lax.axis_index(x_axis)
-        _, hl, wdl = planes.shape
+        hl, wdl = planes.shape[-2:]
         d = depth
 
         # x halo first (one word each side), then y halo on the x-extended
@@ -77,22 +107,23 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
         left = lax.ppermute(planes[..., -1:], x_axis, _ring(nx, up=True))
         right = lax.ppermute(planes[..., :1], x_axis, _ring(nx, up=False))
         ext = jnp.concatenate([left, planes, right], axis=-1)
-        top = lax.ppermute(ext[:, -d:, :], y_axes, _ring(ny, up=True))
-        bot = lax.ppermute(ext[:, :d, :], y_axes, _ring(ny, up=False))
-        ext = jnp.concatenate([top, ext, bot], axis=1)
+        top = lax.ppermute(ext[..., -d:, :], y_axes, _ring(ny, up=True))
+        bot = lax.ppermute(ext[..., :d, :], y_axes, _ring(ny, up=False))
+        ext = jnp.concatenate([top, ext, bot], axis=-2)
 
         if use_pallas:
             from repro.kernels.fhp_step.ops import fhp_step_pallas
             # Pad rows so a hardware-aligned band height divides; dummy
             # rows only corrupt halo-row outputs, which are dropped.
-            he = ext.shape[1]
+            he = ext.shape[-2]
             pad = (-he) % 8
             if pad:
-                ext = jnp.pad(ext, ((0, 0), (0, pad), (0, 0)))
+                widths = [(0, 0)] * (ext.ndim - 2) + [(0, pad), (0, 0)]
+                ext = jnp.pad(ext, widths)
             out = fhp_step_pallas(ext, t, p_force=p_force,
                                   y0=iy * hl - 1, xw0=ix * wdl - 1,
                                   block_rows=8)
-            return out[:, 1:1 + hl, 1:1 + wdl]
+            return out[..., 1:1 + hl, 1:1 + wdl]
 
         # Global coordinates (mod global extent) of every ext row/word: the
         # RNG draws of halo cells must match the owning shard's draws.
@@ -111,12 +142,9 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
             ext = one(ext, t)
         else:
             ext = lax.fori_loop(0, d, lambda j, s: one(s, t + j), ext)
-        return ext[:, d:d + hl, 1:1 + wdl]
+        return ext[..., d:d + hl, 1:1 + wdl]
 
-    # check_vma=False: pallas_call's out_shape carries no varying-mesh-axes
-    # metadata; correctness is established by the bit-exactness tests.
-    return jax.shard_map(chunk, mesh=mesh, in_specs=(spec, P()),
-                         out_specs=spec, check_vma=False)
+    return _shard_map(chunk, mesh, (spec, P()), spec)
 
 
 def make_run(mesh, steps: int, **kw):
@@ -134,12 +162,13 @@ def make_run(mesh, steps: int, **kw):
 
 
 def make_gspmd_run(mesh, steps: int, *, y_axes: Axes = ("data",),
-                   x_axis: str = "model", p_force: float = 0.0):
+                   x_axis: str = "model", p_force: float = 0.0,
+                   batched: bool = False):
     """Baseline distribution: the *global* stepper under jit + sharding
     constraints; GSPMD materialises the halo traffic as collective-permutes
     of the roll/shift edge slices.  Used as the §Perf baseline against the
     explicit shard_map/ppermute scheme above."""
-    spec = lattice_spec(y_axes, x_axis)
+    spec = lattice_spec(y_axes, x_axis, batched=batched)
     sharding = NamedSharding(mesh, spec)
 
     def run(planes, t0):

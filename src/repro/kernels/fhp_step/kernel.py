@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused FHP stream + collide (+ force) on bit planes.
+"""Pallas TPU kernel: fused, temporally-blocked FHP stream + collide (+ force).
 
 This is the TPU-native translation of the paper's two hot loops:
 
@@ -11,14 +11,34 @@ This is the TPU-native translation of the paper's two hot loops:
 The paper streams the whole lattice to memory twice per time step (motion
 pass + scattering pass).  Fusing both into one Pallas kernel halves HBM
 traffic -- the dominant cost of this memory-bound algorithm -- and is the
-main beyond-paper optimization recorded in EXPERIMENTS.md section Perf.
+first beyond-paper optimization recorded in EXPERIMENTS.md section Perf.
 
-Block decomposition (paper Figs. 7/8, adapted): the grid is 1-D over row
-bands of ``bh`` rows.  Each program reads its own band plus the bands above
-and below (the same array bound three times with shifted index maps -- the
-Pallas idiom for the paper's overlapping rectangles A/B/C), computes the
-update for the interior band, and writes a disjoint output band.  VMEM
-plays the role of the CUDA shared-memory apron C.
+Temporal blocking (EXPERIMENTS.md section Perf, stage 3): the kernel
+advances ``steps`` = T full stream->collide->force updates per launch.  The
+row-band halo widens from 1 to T rows; every unrolled step consumes one
+halo row from each side (redundant "apron" compute, the time-extended
+version of the paper's overlapping CUDA blocks in Figs. 7/8), so after T
+steps exactly the program's own disjoint ``bh``-row band is valid and is
+written back.  The plane stack then crosses HBM once per T steps instead of
+once per step -- a T-fold cut of the dominant cost.  Redundant halo compute
+stays exact because the counter-based RNG is a pure function of the global
+``(row, word, t)`` coordinates: two programs recomputing the same halo row
+draw identical bits.
+
+Batched ensemble lanes: the grid is ``(B, H/bh)`` over a ``(B, 8, H, Wd)``
+stack of B independent lattices (parameter sweeps, many-user serving).
+All lanes share one RNG stream -- the counters do not include the batch
+index -- which keeps every lane bit-identical to the unbatched reference
+and gives common-random-number coupling for paired ensemble comparisons;
+diversity enters through the initial conditions and geometry.
+
+Block decomposition (paper Figs. 7/8, adapted): the grid's second axis is
+1-D over row bands of ``bh`` rows.  Each program reads its own band plus
+the bands above and below (the same array bound three times with shifted
+index maps -- the Pallas idiom for the paper's overlapping rectangles
+A/B/C), computes the update for the interior band, and writes a disjoint
+output band.  VMEM plays the role of the CUDA shared-memory apron C.
+``steps <= bh`` keeps the T-row halo inside the neighbour bands.
 
 The x direction is kept un-blocked (full row width per program): the
 periodic x wrap is then a lane rotate inside the block, and no x halo is
@@ -30,7 +50,12 @@ RNG in-kernel: collision chirality and forcing bits are counter-based
 hashes of (row, word, t) -- recomputing them inside the kernel instead of
 streaming precomputed random planes from HBM saves up to 2 more plane
 reads per step (again: memory-bound, so this is a direct win).  Both modes
-are supported; they are bit-identical to ``ref.py``.
+are supported for T=1 and bit-identical to ``ref.py``; T>1 requires
+in-kernel RNG (precomputed planes for intermediate steps would defeat the
+traffic win temporal blocking exists to deliver).  Row counters are
+reduced mod the local lattice height, so halo rows past the periodic wrap
+draw the owning row's stream exactly (this is what makes the redundant
+apron compute of intermediate steps bit-exact).
 """
 from __future__ import annotations
 
@@ -115,102 +140,135 @@ def _bernoulli_words(rows, cols, t, pq: int, salt: int) -> jnp.ndarray:
     return res
 
 
+def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, xw0, t,
+                pq: int, rng_in_kernel: bool, variant: str,
+                chi_pre=None, acc_pre=None) -> jnp.ndarray:
+    """One stream->collide(->force) update of an extended row stack.
+
+    ``cur`` is ``(8, n, wd)``; the result is the ``(8, n-2, wd)`` interior
+    (each step consumes one apron row per side).  ``rows_abs`` is the
+    ``(n, 1)`` int32 array of RNG/parity row coordinates of ``cur``'s rows
+    (global offset applied, periodic wrap already reduced).
+    """
+    n = cur.shape[1]
+    wd = cur.shape[-1]
+    even = (rows_abs % 2) == 0
+
+    # --- stream (paper's "motion", Listing 1) -------------------------------
+    streamed: List[jnp.ndarray] = []
+    for k in range(rules.N_DIR):
+        src = cur[k]
+        (dx0, dy), (dx1, _dy1) = rules.OFFSETS[k]
+        if dx0 == dx1:
+            moved = _shift_x(src, dx0)
+        else:
+            moved = jnp.where(even, _shift_x(src, dx0), _shift_x(src, dx1))
+        # Destination-centric: interior row r (cur row r+1) receives from the
+        # source cur row r + 1 - dy; parity above was that of the source row.
+        streamed.append(moved[1 - dy:n - 1 - dy])
+    streamed.append(cur[rules.REST_BIT, 1:n - 1])    # rest particles stay
+    streamed.append(cur[rules.SOLID_BIT, 1:n - 1])   # geometry is static
+
+    # --- collide (paper's LUT scattering, as boolean algebra) ---------------
+    tt = jnp.asarray(t, _U32)
+    if rng_in_kernel:
+        rows_blk = rows_abs[1:n - 1].astype(_U32)
+        cols_blk = jnp.asarray(xw0, _U32) + jax.lax.broadcasted_iota(
+            _U32, (1, wd), 1)
+        chi = _word_u32(rows_blk, cols_blk, tt, salt=0x11)
+    else:
+        chi = chi_pre
+    planes = boolean.collide_planes(streamed, chi, variant)
+
+    # --- force (momentum injection with probability p) ----------------------
+    if pq > 0:
+        if rng_in_kernel:
+            acc = _bernoulli_words(rows_blk, cols_blk, tt, pq, salt=0x22)
+        else:
+            acc = acc_pre
+        planes = boolean.force_planes(planes, acc)
+    return jnp.stack(planes)
+
+
 def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
-               bh: int, pq: int, rng_in_kernel: bool,
+               h: int, bh: int, pq: int, steps: int, rng_in_kernel: bool,
                variant: str = "fhp2"):
-    """One fused FHP step for a band of ``bh`` rows.
+    """``steps`` fused FHP updates for a band of ``bh`` rows.
 
     Refs (inputs first, output last, per pallas_call convention): the
     scalar block ``[t, y0, xw0]`` (step counter + global coordinates of
     local element (0,0) -- traced, so the kernel composes with shard_map
     where the offsets are axis-index dependent), the three overlapping
     row-band views of the plane stack, then -- when ``rng_in_kernel`` is
-    False -- the precomputed chirality / force planes for the band, and
-    finally the output band.
+    False (T=1 only) -- the precomputed chirality / force planes for the
+    band, and finally the output band.  Grid is ``(B, H/bh)``: axis 0 is
+    the ensemble lane, axis 1 the row band.
     """
     out_ref = rest[-1]
     extra_refs = rest[:-1]
-    i = pl.program_id(0)
-    wd = mid_ref.shape[-1]
+    i = pl.program_id(1)
+    t0 = s_ref[0, 0]
     y0 = s_ref[0, 1]
     xw0 = s_ref[0, 2]
+    T = steps
 
-    # Overlapping read: halo row above = last row of the upper band, halo
-    # row below = first row of the lower band (index maps wrap, so the
-    # global y wrap matches the jnp.roll reference exactly).
-    ext = jnp.concatenate(
-        [up_ref[:, bh - 1:bh, :], mid_ref[...], down_ref[:, 0:1, :]], axis=1)
+    # Overlapping read: T halo rows above = tail of the upper band, T halo
+    # rows below = head of the lower band (index maps wrap, so the global y
+    # wrap matches the jnp.roll reference exactly).
+    cur = jnp.concatenate(
+        [up_ref[0, :, bh - T:bh, :], mid_ref[0], down_ref[0, :, 0:T, :]],
+        axis=1)
 
-    # Absolute row index of ext row r is  y0 + i*bh - 1 + r  (the global H is
-    # even, so modular wrap never changes parity; -1 & 1 == parity(H-1)).
-    row_iota = jax.lax.broadcasted_iota(jnp.int32, (bh + 2, 1), 0)
-    rows_abs = y0 + i * bh - 1 + row_iota
-    even = (rows_abs % 2) == 0
-
-    # --- stream (paper's "motion", Listing 1) -------------------------------
-    streamed: List[jnp.ndarray] = []
-    for k in range(rules.N_DIR):
-        src = ext[k]
-        (dx0, dy), (dx1, _dy1) = rules.OFFSETS[k]
-        if dx0 == dx1:
-            moved = _shift_x(src, dx0)
-        else:
-            moved = jnp.where(even, _shift_x(src, dx0), _shift_x(src, dx1))
-        # Destination-centric: output row r (ext row r+1) receives from the
-        # source ext row r + 1 - dy; parity above was that of the source row.
-        streamed.append(moved[1 - dy:1 - dy + bh])
-    streamed.append(mid_ref[rules.REST_BIT])    # rest particles stay
-    streamed.append(mid_ref[rules.SOLID_BIT])   # geometry is static
-
-    # --- collide (paper's LUT scattering, as boolean algebra) ---------------
-    t = s_ref[0, 0].astype(_U32)
-    if rng_in_kernel:
-        rows_blk = y0.astype(_U32) + (i * bh + jax.lax.broadcasted_iota(
-            jnp.int32, (bh, 1), 0)).astype(_U32)
-        cols_blk = xw0.astype(_U32) + jax.lax.broadcasted_iota(
-            _U32, (1, wd), 1)
-        chi = _word_u32(rows_blk, cols_blk, t, salt=0x11)
-    else:
-        chi = extra_refs[0][...]
-    planes = boolean.collide_planes(streamed, chi, variant)
-
-    # --- force (momentum injection with probability p) ----------------------
-    if pq > 0:
+    for s in range(T):
+        n = cur.shape[1]                      # bh + 2 * (T - s)
+        # Local row of cur row r is  i*bh - (T - s) + r, reduced mod the
+        # lattice height so rows past the periodic wrap hash (and stream
+        # with the parity of) the owning row's coordinates -- required for
+        # the intermediate-step apron rows to be bit-exact.
+        row_iota = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+        rows_abs = y0 + (i * bh - (T - s) + row_iota) % h
         if rng_in_kernel:
-            acc = _bernoulli_words(rows_blk, cols_blk, t, pq, salt=0x22)
+            cur = _fused_step(cur, rows_abs, xw0, t0 + s, pq,
+                              True, variant)
         else:
-            acc = extra_refs[-1][...]
-        planes = boolean.force_planes(planes, acc)
+            cur = _fused_step(cur, rows_abs, xw0, t0 + s, pq, False, variant,
+                              chi_pre=extra_refs[0][...],
+                              acc_pre=extra_refs[-1][...] if pq > 0 else None)
 
-    out_ref[...] = jnp.stack(planes)
+    out_ref[0] = cur
 
 
 def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
                   rng_in_kernel: bool, interpret: bool,
-                  variant: str = "fhp2"):
-    """Build the pallas_call for a (8, h, wd) plane stack."""
+                  variant: str = "fhp2", steps: int = 1, batch: int = 1):
+    """Build the pallas_call for a (B, 8, h, wd) plane stack."""
     assert h % bh == 0, f"H={h} must be a multiple of block_rows={bh}"
+    assert 1 <= steps <= bh, \
+        f"steps_per_launch={steps} needs a {steps}-row halo <= block_rows={bh}"
+    assert rng_in_kernel or steps == 1, \
+        "precomputed RNG planes only cover one step: steps_per_launch == 1"
     nb = h // bh
 
-    band = lambda f: pl.BlockSpec((8, bh, wd), f)
+    band = lambda f: pl.BlockSpec((1, 8, bh, wd), f)
     in_specs = [
-        pl.BlockSpec((1, 3), lambda i: (0, 0)),            # [t, y0, xw0]
-        band(lambda i: (0, (i + nb - 1) % nb, 0)),         # upper halo band
-        band(lambda i: (0, i, 0)),                         # own band
-        band(lambda i: (0, (i + 1) % nb, 0)),              # lower halo band
+        pl.BlockSpec((1, 3), lambda b, i: (0, 0)),            # [t, y0, xw0]
+        band(lambda b, i: (b, 0, (i + nb - 1) % nb, 0)),      # upper halo band
+        band(lambda b, i: (b, 0, i, 0)),                      # own band
+        band(lambda b, i: (b, 0, (i + 1) % nb, 0)),           # lower halo band
     ]
     if not rng_in_kernel:
-        in_specs.append(pl.BlockSpec((bh, wd), lambda i: (i, 0)))   # chi
+        in_specs.append(pl.BlockSpec((bh, wd), lambda b, i: (i, 0)))   # chi
         if pq > 0:
-            in_specs.append(pl.BlockSpec((bh, wd), lambda i: (i, 0)))  # accel
+            in_specs.append(
+                pl.BlockSpec((bh, wd), lambda b, i: (i, 0)))           # accel
 
-    kern = functools.partial(fhp_kernel, bh=bh, pq=pq,
+    kern = functools.partial(fhp_kernel, h=h, bh=bh, pq=pq, steps=steps,
                              rng_in_kernel=rng_in_kernel, variant=variant)
     return pl.pallas_call(
         kern,
-        grid=(nb,),
+        grid=(batch, nb),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((8, bh, wd), lambda i: (0, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((8, h, wd), jnp.uint32),
+        out_specs=pl.BlockSpec((1, 8, bh, wd), lambda b, i: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, 8, h, wd), jnp.uint32),
         interpret=interpret,
     )

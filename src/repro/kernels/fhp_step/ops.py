@@ -1,13 +1,19 @@
-"""Jitted wrappers for the fused FHP Pallas kernel.
+"""Jitted wrappers for the fused, temporally-blocked FHP Pallas kernel.
 
 ``fhp_step_pallas`` is a drop-in replacement for
 ``core.bitplane.step_planes`` (bit-identical given the same
-``t / p_force / y0 / xw0``); ``run_pallas`` advances many steps with a
-donated carry.  On non-TPU backends the kernel runs in interpret mode.
+``t / p_force / y0 / xw0``) that also accepts a leading ensemble batch
+axis and ``steps_per_launch`` = T fused steps per kernel launch;
+``run_pallas`` advances many steps with a donated carry, launching the
+multi-step kernel ``steps // T`` times (plus a single-step remainder).
+``autotune_launch`` picks ``(block_rows, steps_per_launch)`` under the
+VMEM budget from a bytes-per-site-update model.  On non-TPU backends the
+kernel runs in interpret mode.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,45 +26,113 @@ from repro.kernels.fhp_step import kernel as _k
 # boolean temporaries, ~2x slack) under this.
 VMEM_BUDGET_BYTES = 8 * 2 ** 20
 
+# Compute cost of updating one extended row relative to moving one row
+# across HBM: the kernel is memory-bound (paper sec. 4; roofline/analysis),
+# so redundant apron rows are cheap but not free.  Used by the autotuner.
+COMPUTE_ROW_WEIGHT = 0.2
 
-def vmem_bytes(bh: int, wd: int) -> int:
-    """Estimated VMEM working set of one program instance."""
+MAX_STEPS_PER_LAUNCH = 8
+
+
+def vmem_bytes(bh: int, wd: int, steps: int = 1) -> int:
+    """Estimated VMEM working set of one program instance.
+
+    3 resident input bands + 1 output band, plus the unrolled working
+    stack and boolean temporaries on the widest (first-step) extent of
+    ``bh + 2 * steps`` rows.
+    """
     band = 8 * bh * wd * 4
-    temps = 24 * bh * wd * 4          # collision conditions + streams
-    return 4 * band + temps
+    ext = 8 * (bh + 2 * steps) * wd * 4       # current plane stack
+    temps = 24 * (bh + 2 * steps) * wd * 4    # collision conditions + streams
+    return 4 * band + ext + temps
 
 
-def pick_block_rows(h: int, wd: int) -> int:
-    """Largest power-of-two band height (<=32) that divides H and fits VMEM."""
+def pick_block_rows(h: int, wd: int, steps: int = 1) -> int:
+    """Largest power-of-two band height (<=32) that divides H, admits the
+    ``steps``-row halo, and fits VMEM."""
     bh = 32
-    while bh > 1 and (h % bh or vmem_bytes(bh, wd) > VMEM_BUDGET_BYTES):
+    while bh > steps and (h % bh or vmem_bytes(bh, wd, steps)
+                          > VMEM_BUDGET_BYTES):
         bh //= 2
-    if h % bh or vmem_bytes(bh, wd) > VMEM_BUDGET_BYTES:
-        raise ValueError(f"no valid block for H={h}, Wd={wd}")
+    if h % bh or bh < steps or vmem_bytes(bh, wd, steps) > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"no valid block for H={h}, Wd={wd}, steps_per_launch={steps}")
     return bh
 
 
+def launch_cost(bh: int, steps: int) -> float:
+    """Modeled cost per useful site update, in HBM row-move units.
+
+    Per program per launch: ``bh + 2*steps`` rows read + ``bh`` rows
+    written, plus ``sum_s (bh + 2*(steps-s-1))`` rows of (cheap, weighted)
+    apron compute, for ``bh * steps`` useful row-updates.
+    """
+    mem_rows = (bh + 2 * steps) + bh
+    compute_rows = bh * steps + steps * (steps - 1)
+    return (mem_rows + COMPUTE_ROW_WEIGHT * compute_rows) / (bh * steps)
+
+
+def hbm_bytes_per_site(bh: int, steps: int) -> float:
+    """Modeled HBM traffic per site update for the fused T-step kernel."""
+    return 8 * 4 * ((bh + 2 * steps) + bh) / (32.0 * bh * steps)
+
+
+def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
+                    vmem_budget: int = VMEM_BUDGET_BYTES) -> Tuple[int, int]:
+    """Choose ``(block_rows, steps_per_launch)`` minimizing ``launch_cost``
+    subject to divisibility, halo depth <= block_rows, and the VMEM budget.
+    """
+    best = None
+    best_cost = None
+    bh = 32
+    while bh >= 1:
+        if h % bh == 0:
+            for steps in range(1, min(bh, max_steps) + 1):
+                if vmem_bytes(bh, wd, steps) > vmem_budget:
+                    break
+                cost = launch_cost(bh, steps)
+                if best_cost is None or cost < best_cost:
+                    best, best_cost = (bh, steps), cost
+        bh //= 2
+    if best is None:
+        raise ValueError(f"no valid launch config for H={h}, Wd={wd}")
+    return best
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "p_force", "block_rows", "rng_in_kernel", "interpret", "variant"))
+    "p_force", "block_rows", "rng_in_kernel", "interpret", "variant",
+    "steps_per_launch"))
 def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
                     y0=0, xw0=0, block_rows: int = 0,
                     rng_in_kernel: bool = True,
                     interpret: bool | None = None,
-                    variant: str = "fhp2") -> jnp.ndarray:
-    """One fused stream+collide(+force) FHP step on (8, H, Wd) uint32 planes.
+                    variant: str = "fhp2",
+                    steps_per_launch: int = 1) -> jnp.ndarray:
+    """``steps_per_launch`` fused stream+collide(+force) FHP steps in one
+    kernel launch, on ``(8, H, Wd)`` or batched ``(B, 8, H, Wd)`` uint32
+    planes (ensemble lanes; all lanes share the RNG stream).
 
     ``y0``/``xw0`` (global coordinates of local element (0,0)) may be
     traced -- they ride into the kernel in the scalar block, so the kernel
     composes with shard_map (per-shard offsets from axis_index)."""
-    _, h, wd = planes.shape
-    bh = block_rows or pick_block_rows(h, wd)
+    squeeze = planes.ndim == 3
+    if squeeze:
+        planes = planes[None]
+    b, _, h, wd = planes.shape
+    T = steps_per_launch
+    if T != 1 and not rng_in_kernel:
+        raise ValueError("steps_per_launch > 1 requires rng_in_kernel=True "
+                         "(precomputed RNG planes cover a single step)")
+    bh = block_rows or pick_block_rows(h, wd, steps=T)
+    if T > bh:
+        raise ValueError(f"steps_per_launch={T} > block_rows={bh}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     pq = prng.quantize_p(p_force)
 
     step = _k.make_fhp_step(h, wd, bh=bh, pq=pq,
                             rng_in_kernel=rng_in_kernel, interpret=interpret,
-                            variant=variant)
+                            variant=variant, steps=T, batch=b)
     scalars = jnp.stack([jnp.asarray(t, jnp.int32),
                          jnp.asarray(y0, jnp.int32),
                          jnp.asarray(xw0, jnp.int32)]).reshape(1, 3)
@@ -68,12 +142,27 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
         if pq > 0:
             args.append(prng.bernoulli_words((h, wd), t, p_force,
                                              y0=y0, xw0=xw0))
-    return step(*args)
+    out = step(*args)
+    return out[0] if squeeze else out
 
 
 def run_pallas(planes: jnp.ndarray, steps: int, *, p_force: float = 0.0,
-               t0=0, **kw) -> jnp.ndarray:
-    """Advance ``steps`` fused steps (fori_loop carry, donable)."""
+               t0=0, steps_per_launch: int = 1, **kw) -> jnp.ndarray:
+    """Advance ``steps`` fused steps (fori_loop carry, donable).
+
+    With ``steps_per_launch`` = T > 1 the plane stack crosses HBM once per
+    T steps; ``steps % T`` trailing steps run as single-step launches.
+    Bit-identical to the T=1 path for any T (equivalence-tested)."""
+    T = int(steps_per_launch)
+    full, rem = divmod(int(steps), T)
+
     def body(i, s):
-        return fhp_step_pallas(s, t0 + i, p_force=p_force, **kw)
-    return jax.lax.fori_loop(0, steps, body, planes)
+        return fhp_step_pallas(s, t0 + i * T, p_force=p_force,
+                               steps_per_launch=T, **kw)
+
+    out = jax.lax.fori_loop(0, full, body, planes)
+
+    def tail(i, s):
+        return fhp_step_pallas(s, t0 + full * T + i, p_force=p_force, **kw)
+
+    return jax.lax.fori_loop(0, rem, tail, out)

@@ -233,6 +233,15 @@ def _extrapolate(cfg, targets, costs):
     return out
 
 
+def _cost_dict(compiled) -> Dict:
+    """cost_analysis() returns a list of dicts on older jax, a dict on
+    newer; normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _measure(fn, args, in_sh, donate, mesh, rules) -> Dict[str, float]:
     from repro.models import common as cm
     from repro.parallel.context import use_rules
@@ -240,7 +249,7 @@ def _measure(fn, args, in_sh, donate, mesh, rules) -> Dict[str, float]:
         with use_rules(rules), cm.unroll_scans():
             compiled = jax.jit(fn, in_shardings=in_sh,
                                donate_argnums=donate).lower(*args).compile()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_dict(compiled)
     from repro.roofline import collective_bytes
     from repro.roofline.analysis import hbm_bytes_estimate
     text = compiled.as_text()
@@ -277,8 +286,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             print(mem)                      # proves it fits
-            cost = compiled.cost_analysis()
-            print({k: v for k, v in (cost or {}).items()
+            print({k: v for k, v in _cost_dict(compiled).items()
                    if k in ("flops", "bytes accessed")})
     chips = mesh.devices.size
     rec = analyze_compiled(compiled, model_flops=meta.get("model_flops"),

@@ -109,10 +109,47 @@ def exp_fhp_depth() -> Dict:
     return out
 
 
+def exp_fhp_temporal() -> Dict:
+    """fhp-lattice temporal blocking (the tentpole HBM-traffic lever).
+
+    HYPOTHESIS: the fused step moves ~2 B/site (one read + one write of 8
+    bit planes); computing T steps per launch with a T-row apron moves the
+    stack once per T steps, so modeled traffic should approach 2/T + halo
+    overhead B/site while redundant apron compute grows only as
+    (T-1)/block_rows.  The autotuner should therefore push T to the
+    redundancy/VMEM frontier, and site-updates/sec on a memory-bound
+    backend should scale accordingly (bench_temporal measures it).
+    """
+    from repro.kernels.fhp_step import ops
+    h_shard, w_shard = 8192, 65536        # per-device shard of the big cell
+    wd = w_shard // 32
+    out = {"cell": f"fhp-lattice shard {h_shard}x{w_shard}, modeled",
+           "hypothesis": exp_fhp_temporal.__doc__}
+    for t_launch in (1, 2, 4, 8):
+        bh = ops.pick_block_rows(h_shard, wd, steps=t_launch)
+        out[f"temporal T={t_launch}"] = {
+            "block_rows": bh,
+            "hbm_bytes_per_site_step": ops.hbm_bytes_per_site(bh, t_launch),
+            "vmem_bytes": ops.vmem_bytes(bh, wd, t_launch),
+            "launch_cost_row_units": ops.launch_cost(bh, t_launch),
+            "redundant_row_fraction": (t_launch - 1) / bh,
+        }
+    bh_t, t_t = ops.autotune_launch(h_shard, wd)
+    out["autotune"] = {
+        "block_rows": bh_t, "steps_per_launch": t_t,
+        "hbm_bytes_per_site_step": ops.hbm_bytes_per_site(bh_t, t_t),
+        "speedup_vs_T1_modeled":
+            ops.hbm_bytes_per_site(ops.pick_block_rows(h_shard, wd), 1)
+            / ops.hbm_bytes_per_site(bh_t, t_t),
+    }
+    return out
+
+
 EXPERIMENTS = {
     "qwen_headpad": exp_qwen_headpad,
     "seamless_seqpar": exp_seamless_seqpar,
     "fhp_depth": exp_fhp_depth,
+    "fhp_temporal": exp_fhp_temporal,
 }
 
 

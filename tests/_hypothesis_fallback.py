@@ -1,0 +1,76 @@
+"""Deterministic stand-in for the tiny slice of ``hypothesis`` this suite
+uses (``@settings`` + ``@given(st.integers(lo, hi), ...)``), for
+environments where the real package is not installed.
+
+Small integer domains are enumerated exhaustively (the rule-table
+properties over 0..255 become exhaustive checks); larger domains are
+sampled from a fixed-seed generator with the bounds always included, so a
+failure reproduces on every run.  If ``hypothesis`` is installed the test
+modules import it instead and this file is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_ENUMERATE_LIMIT = 256
+
+
+class _Integers:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def domain(self):
+        if self.hi - self.lo + 1 <= _ENUMERATE_LIMIT:
+            return list(range(self.lo, self.hi + 1))
+        return None
+
+    def sample(self, rng: np.random.Generator) -> int:
+        return int(rng.integers(self.lo, self.hi, endpoint=True))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+
+class settings:
+    def __init__(self, max_examples: int = 20, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, f):
+        # Applied on top of @given's wrapper: record the example budget.
+        f._max_examples = self.max_examples
+        return f
+
+
+def given(*strats: _Integers):
+    def deco(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(wrapper, "_max_examples", 20)
+            domains = [s.domain() for s in strats]
+            if all(d is not None for d in domains):
+                cases = [()]
+                for d in domains:
+                    cases = [c + (v,) for c in cases for v in d]
+            else:
+                rng = np.random.default_rng(0xF4B)
+                corner_lo = tuple(s.lo for s in strats)
+                corner_hi = tuple(s.hi for s in strats)
+                cases = [corner_lo, corner_hi] + [
+                    tuple(s.sample(rng) for s in strats)
+                    for _ in range(max(0, max_examples - 2))]
+            for case in cases:
+                f(*args, *case, **kwargs)
+
+        # pytest must see a parameterless test, not the strategy-filled
+        # arguments of the wrapped function (it would treat them as
+        # fixtures).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
