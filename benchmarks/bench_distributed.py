@@ -1,0 +1,145 @@
+"""Sharded temporal-blocking sweep: the distributed FHP hot path as a
+function of halo depth d, in-kernel steps-per-launch T, and local-update
+implementation (fused Pallas extended-shard kernel vs jnp), on a
+host-platform mesh of 4 fake devices (2x2 over ("data", "model")).
+
+Wall-clock here is only meaningful on a real multi-chip backend (on CPU
+the Pallas kernel interprets and ppermute is a memcpy); the durable
+output is the *model* columns persisted to BENCH_kernel.json -- modeled
+HBM bytes/site/step of the extended-shard launches, exchange count and
+ICI bytes per step -- plus the joint (block_rows, T, depth) point the
+autotuner picks.  The sweep runs in a subprocess so the fake-device
+XLA_FLAGS never leak into the parent (benchmarks/run.py may already have
+initialised jax on the real topology).
+
+    PYTHONPATH=src python -m benchmarks.bench_distributed          # full
+    PYTHONPATH=src python -m benchmarks.bench_distributed --smoke  # tiny/CI
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from typing import Dict, List
+
+MESH = (2, 2)
+
+SCRIPT = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=4")
+    import json, time
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from repro.core import byte_step, bitplane, distributed
+    from repro.kernels.fhp_step.ops import pick_block_rows_extended
+    from repro.roofline.analysis import sharded_fhp_traffic
+
+    smoke = sys.argv[1] == "smoke"
+    h, w = (32, 512) if smoke else (128, 2048)
+    steps = 8 if smoke else 16
+    depths = (1, 2, 4) if smoke else (1, 2, 4, 8)
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    hl, wdl = h // 2, w // 32 // 2
+    planes = bitplane.pack(jnp.asarray(
+        byte_step.make_channel(h, w, density=0.3, seed=0)))
+    sh = NamedSharding(mesh, distributed.lattice_spec(("data",), "model"))
+    pd = jax.device_put(planes, sh)
+
+    def timed(fn):
+        fn(pd, 0)[0].block_until_ready()       # compile + warm-up
+        t0 = time.perf_counter()
+        fn(pd, 0)[0].block_until_ready()
+        return time.perf_counter() - t0
+
+    for depth in depths:
+        assert steps % depth == 0, (steps, depth)
+        t_sweep = sorted({1, depth} if smoke else
+                         {t for t in (1, 2, 4, 8) if t <= depth})
+        for use_pallas, impl in ((False, "jnp-sharded"),
+                                 (True, "pallas-sharded")):
+            for T in (t_sweep if use_pallas else [1]):
+                kw = dict(y_axes=("data",), x_axis="model", p_force=0.01,
+                          depth=depth, use_pallas=use_pallas)
+                if use_pallas:
+                    kw["steps_per_launch"] = T
+                run = jax.jit(distributed.make_run(mesh, steps, **kw))
+                dt = timed(run)
+                rec = {"bench": "distributed", "impl": impl,
+                       "backend": jax.default_backend(), "mesh": [2, 2],
+                       "depth": depth, "T": T, "B": 1,
+                       "sites_per_sec": h * w * steps / dt,
+                       "steps": steps, "lattice": [h, w], "smoke": smoke,
+                       "structural": False,
+                       "model_exchanges_per_step": 1.0 / depth}
+                if use_pallas:
+                    bh = pick_block_rows_extended(wdl + 2, steps=T)
+                    m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T,
+                                            block_rows=bh)
+                    rec.update(
+                        block_rows=bh,
+                        model_hbm_bytes_per_site=m["hbm_bytes_per_site_step"],
+                        model_ici_bytes_per_site=m["ici_bytes_per_site_step"],
+                        model_launches_per_step=m["launches_per_step"])
+                print("RECORD " + json.dumps(rec))
+    print("BENCH_DONE")
+""")
+
+
+def _model_records(smoke: bool) -> List[Dict]:
+    """Structural records (no subprocess, no timing): the joint autotuner
+    point and its modeled sharded traffic for representative shard sizes."""
+    from repro.kernels.fhp_step.ops import autotune_launch
+    from repro.roofline.analysis import sharded_fhp_traffic
+    shards = [(256, 32)] if smoke else [(256, 32), (1024, 128), (8192, 2048)]
+    out = []
+    for hl, wdl in shards:
+        bh, T, depth = autotune_launch(hl, wdl, max_depth=16)
+        m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T, block_rows=bh)
+        out.append({
+            "bench": "distributed", "impl": "pallas-sharded",
+            "backend": None, "shard": [hl, wdl], "block_rows": bh,
+            "T": T, "depth": depth, "B": 1, "sites_per_sec": None,
+            "lattice": None, "smoke": smoke, "structural": True,
+            "autotuned": True,
+            "model_hbm_bytes_per_site": m["hbm_bytes_per_site_step"],
+            "model_ici_bytes_per_site": m["ici_bytes_per_site_step"],
+            "model_exchanges_per_step": m["exchanges_per_step"],
+            "model_launches_per_step": m["launches_per_step"]})
+    return out
+
+
+def main(smoke: bool | None = None) -> List[Dict]:
+    import jax
+    if smoke is None:
+        smoke = jax.default_backend() != "tpu"
+    records = _model_records(smoke)
+    for r in records:
+        print(f"autotune(shard={r['shard']}),(bh={r['block_rows']} "
+              f"T={r['T']} d={r['depth']}),config")
+        print(f"model_hbm_bytes_per_site(shard={r['shard']}),"
+              f"{r['model_hbm_bytes_per_site']:.4f},B")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT, "smoke" if smoke else "full"],
+        capture_output=True, text=True, timeout=1800, env=env)
+    if r.returncode != 0 or "BENCH_DONE" not in r.stdout:
+        # Fail loudly: silently returning only the structural rows would
+        # leave BENCH_kernel.json without timed distributed records while
+        # CI stays green, breaking the never-empty-trajectory guarantee.
+        raise RuntimeError("bench_distributed subprocess failed:\n"
+                           f"{r.stdout}\n{r.stderr}")
+    for line in r.stdout.splitlines():
+        if line.startswith("RECORD "):
+            rec = json.loads(line[len("RECORD "):])
+            records.append(rec)
+            print(f"{rec['impl']}_d{rec['depth']}_T{rec['T']}_sps,"
+                  f"{rec['sites_per_sec']:.3e},sites/s")
+    return records
+
+
+if __name__ == "__main__":
+    main(smoke=True if "--smoke" in sys.argv[1:] else None)

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from repro.core import bitplane, byte_step
 from repro.kernels.fhp_step.ops import (autotune_launch, hbm_bytes_per_site,
-                                        pick_block_rows, vmem_bytes)
+                                        pick_block_rows, run_pallas,
+                                        vmem_bytes)
 
 H, W = 1024, 4096
 WD = W // 32
@@ -50,7 +51,24 @@ def main(smoke: bool | None = None) -> List[Dict]:
     records.append({"bench": "kernel", "impl": "oracle-jnp",
                     "backend": backend, "block_rows": None, "T": 1, "B": 1,
                     "sites_per_sec": mups * 1e6, "steps": steps,
-                    "lattice": [h, w], "smoke": smoke})
+                    "lattice": [h, w], "smoke": smoke, "structural": False})
+
+    # Real timed record for the pallas impl (interpret mode off-TPU: the
+    # number measures Python there, but the perf trajectory per impl must
+    # never be empty, and on TPU this is the headline row).
+    bh_run = pick_block_rows(h, w // 32)
+    fn = jax.jit(lambda p: run_pallas(p, steps, p_force=0.01,
+                                      block_rows=bh_run))
+    fn(planes).block_until_ready()
+    t0 = time.perf_counter()
+    fn(planes).block_until_ready()
+    dt = time.perf_counter() - t0
+    mups = h * w * steps / dt / 1e6
+    print(f"pallas_mups,{mups:.1f},Mups")
+    records.append({"bench": "kernel", "impl": "pallas-fused",
+                    "backend": backend, "block_rows": bh_run, "T": 1, "B": 1,
+                    "sites_per_sec": mups * 1e6, "steps": steps,
+                    "lattice": [h, w], "smoke": smoke, "structural": False})
 
     for wd in (128, 512, 2048, wd_full):
         bh = pick_block_rows(h, wd)
@@ -66,7 +84,8 @@ def main(smoke: bool | None = None) -> List[Dict]:
                         "vmem_bytes": vmem_bytes(bh_t, wd, t_launch),
                         "model_hbm_bytes_per_site":
                             hbm_bytes_per_site(bh_t, t_launch),
-                        "lattice": None, "smoke": smoke})
+                        "lattice": None, "smoke": smoke,
+                        "structural": True})
     # HBM traffic of the fused kernel: one read + one write of 8 planes
     print(f"hbm_bytes_per_site,{2 * 8 * 4 / 32.0},B")
     print(f"hbm_bytes_per_site_unfused,{2 * 2 * 8 * 4 / 32.0},B")

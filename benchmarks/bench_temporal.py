@@ -60,7 +60,7 @@ def main(smoke: bool | None = None) -> List[Dict]:
     records.append({"bench": "temporal", "impl": "oracle-jnp",
                     "backend": backend, "block_rows": None, "T": 1, "B": 1,
                     "sites_per_sec": mups * 1e6, "steps": steps,
-                    "lattice": [h, w], "smoke": smoke})
+                    "lattice": [h, w], "smoke": smoke, "structural": False})
 
     bh_auto, t_auto = autotune_launch(h, wd)
     print(f"autotune_block_rows,{bh_auto},rows")
@@ -89,7 +89,7 @@ def main(smoke: bool | None = None) -> List[Dict]:
                 "bench": "temporal", "impl": "pallas-fused",
                 "backend": backend, "block_rows": bh, "T": t_launch, "B": b,
                 "sites_per_sec": mups * 1e6, "steps": steps,
-                "lattice": [h, w], "smoke": smoke,
+                "lattice": [h, w], "smoke": smoke, "structural": False,
                 "model_hbm_bytes_per_site": hbm_bytes_per_site(bh, t_launch),
                 "vmem_bytes": vmem_bytes(bh, wd, t_launch)})
         print(f"model_hbm_bytes_per_site_T{t_launch},"

@@ -1,0 +1,15 @@
+#!/bin/sh
+# Single CI entry point: tier-1 correctness gate + smoke perf records.
+#
+#   benchmarks/ci.sh
+#
+# tier1 = the fast deterministic core tests (see tests/conftest.py); the
+# full suite (multi-device subprocess tests included) far exceeds the CI
+# budget -- run it with plain ``pytest -q`` when touching the distributed
+# or launch layers.  The smoke benchmark rewrites BENCH_kernel.json with
+# at least one real timed record per impl plus the structural model rows.
+set -e
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -m tier1 -x -q
+python -m benchmarks.run --smoke

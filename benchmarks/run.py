@@ -8,13 +8,18 @@ Fig. 9   -> bench_fig9    (speedup over sequential analogue + v5e projection)
 Fig. 10  -> bench_fig10   (USD/Mups, Watt/Mups)
 kernel   -> bench_kernel  (fused-kernel structure: blocks, VMEM, B/site)
 temporal -> bench_temporal (steps-per-launch x ensemble-lane sweep)
+distributed -> bench_distributed ((depth, T, use_pallas) sharded sweep)
 
-The kernel-shaped benches (kernel, temporal) also return machine-readable
-records; this driver persists them to ``BENCH_kernel.json`` --
-site-updates/sec per ``(backend, block_rows, T, B)`` -- so the perf
-trajectory is tracked across PRs.  ``--smoke`` runs the record-producing
-benches on tiny lattices (interpret mode on CPU) so CI gets the same JSON
-shape in seconds.
+The kernel-shaped benches (kernel, temporal, distributed) also return
+machine-readable records; this driver persists them to
+``BENCH_kernel.json`` -- site-updates/sec per ``(backend, block_rows, T,
+B)`` -- so the perf trajectory is tracked across PRs.  Records with
+``"structural": true`` carry model-only columns (no wall clock --
+``sites_per_sec``/``lattice`` are null by design); every impl also emits
+at least one real timed record, even under ``--smoke``, so the perf
+trajectory is never empty.  ``--smoke`` runs the record-producing benches
+on tiny lattices (interpret mode on CPU) so CI gets the same JSON shape
+in seconds.
 """
 from __future__ import annotations
 
@@ -29,8 +34,8 @@ BENCH_JSON = "BENCH_kernel.json"
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     smoke = "--smoke" in argv
-    from benchmarks import (bench_fig9, bench_fig10, bench_kernel,
-                            bench_table1, bench_temporal)
+    from benchmarks import (bench_distributed, bench_fig9, bench_fig10,
+                            bench_kernel, bench_table1, bench_temporal)
     records = []
     paper_benches = [] if smoke else [
         ("table1", bench_table1), ("fig9", bench_fig9),
@@ -40,7 +45,8 @@ def main(argv=None) -> None:
         t0 = time.time()
         mod.main()
         print(f"-- {name} done in {time.time() - t0:.1f}s --\n")
-    for name, mod in [("kernel", bench_kernel), ("temporal", bench_temporal)]:
+    for name, mod in [("kernel", bench_kernel), ("temporal", bench_temporal),
+                      ("distributed", bench_distributed)]:
         print(f"== {name} ==")
         t0 = time.time()
         records.extend(mod.main(smoke=smoke or None) or [])

@@ -51,11 +51,14 @@ else:
         return _experimental_smap(f, mesh=mesh, in_specs=in_specs,
                                   out_specs=out_specs, check_rep=False)
 
-if hasattr(lax, "axis_size"):
-    _axis_size = lax.axis_size
-else:
-    def _axis_size(axes):
-        return lax.psum(1, axes)
+def _mesh_size(mesh, axes: Axes) -> int:
+    """Static product of mesh extents over one axis name or a tuple."""
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
 
 
 def lattice_spec(y_axes: Axes = ("data",), x_axis: str = "model",
@@ -77,30 +80,41 @@ def _ring(n: int, up: bool):
 def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                          x_axis: str = "model", p_force: float = 0.0,
                          depth: int = 1, use_pallas: bool = False,
-                         batched: bool = False):
+                         batched: bool = False,
+                         steps_per_launch: int | None = None,
+                         block_rows: int = 0):
     """Build ``step(planes, t) -> planes`` advancing ``depth`` global FHP
     steps per halo exchange under ``shard_map``.
 
-    ``use_pallas`` runs the local update with the fused Pallas kernel
-    (depth 1 only: an exchange-free multi-step needs RNG draws for halo
-    cells of the *neighbour's* rows, which the kernel's mod-local-H
-    counters cannot express; the jnp path provides them via modular global
-    coordinate arrays).  ``batched`` steps a (B, 8, H, Wd) ensemble stack
-    (lanes replicated over the mesh, sharded in H/Wd like the unbatched
-    case).
+    ``use_pallas`` runs the local update with the fused Pallas kernel in
+    extended-shard mode for any ``depth``: the kernel's RNG / parity
+    counters reduce **global** coordinates mod the global extents, so the
+    apron rows of the exchanged halo draw the owning shard's stream and
+    one depth-``d`` exchange feeds ``d`` in-kernel steps --
+    ``ceil(d / steps_per_launch)`` fused launches with a donated carry
+    (``steps_per_launch`` defaults to ``min(depth, MAX_STEPS_PER_LAUNCH)``;
+    ``block_rows`` 0 = auto).  The sharded hot path thus compounds the
+    T-fold HBM-traffic cut of temporal blocking with the 1/d exchange
+    count of halo-widening.  ``batched`` steps a (B, 8, H, Wd) ensemble
+    stack (lanes replicated over the mesh, sharded in H/Wd like the
+    unbatched case).
 
     The returned function is shard_map'ed but not jitted; callers compose it
     (e.g. ``lax.fori_loop`` over exchanges) and jit the whole program.
     """
     assert 1 <= depth <= 31, "x halo is one 32-node word -> depth <= 31"
-    assert not (use_pallas and depth != 1), "pallas local step: depth == 1"
     spec = lattice_spec(y_axes, x_axis, batched=batched)
+    ny, nx = _mesh_size(mesh, y_axes), _mesh_size(mesh, x_axis)
 
     def chunk(planes: jnp.ndarray, t) -> jnp.ndarray:
-        ny, nx = _axis_size(y_axes), _axis_size(x_axis)
         iy, ix = lax.axis_index(y_axes), lax.axis_index(x_axis)
         hl, wdl = planes.shape[-2:]
         d = depth
+        # The ring ppermute reaches nearest neighbours only: a depth-d
+        # apron must fit in one shard's rows or the halo slices clamp
+        # short and the validity accounting silently breaks.
+        assert d <= hl, f"depth={d} > local rows hl={hl}: halo would " \
+                        f"need rows beyond the nearest-neighbour shard"
 
         # x halo first (one word each side), then y halo on the x-extended
         # array -- the corner words ride along with the y rows.
@@ -112,18 +126,15 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
         ext = jnp.concatenate([top, ext, bot], axis=-2)
 
         if use_pallas:
-            from repro.kernels.fhp_step.ops import fhp_step_pallas
-            # Pad rows so a hardware-aligned band height divides; dummy
-            # rows only corrupt halo-row outputs, which are dropped.
-            he = ext.shape[-2]
-            pad = (-he) % 8
-            if pad:
-                widths = [(0, 0)] * (ext.ndim - 2) + [(0, pad), (0, 0)]
-                ext = jnp.pad(ext, widths)
-            out = fhp_step_pallas(ext, t, p_force=p_force,
-                                  y0=iy * hl - 1, xw0=ix * wdl - 1,
-                                  block_rows=8)
-            return out[..., 1:1 + hl, 1:1 + wdl]
+            from repro.kernels.fhp_step.ops import run_extended
+            # Global coordinates of ext element (0, 0) (the apron corner)
+            # and the global extents the kernel's RNG reduces mod.
+            out = run_extended(ext, d, t0=t, p_force=p_force,
+                               y0=iy * hl - d, xw0=ix * wdl - 1,
+                               hg=ny * hl, wdg=nx * wdl,
+                               steps_per_launch=steps_per_launch,
+                               block_rows=block_rows)
+            return out[..., d:d + hl, 1:1 + wdl]
 
         # Global coordinates (mod global extent) of every ext row/word: the
         # RNG draws of halo cells must match the owning shard's draws.

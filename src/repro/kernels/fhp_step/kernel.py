@@ -56,6 +56,29 @@ traffic win temporal blocking exists to deliver).  Row counters are
 reduced mod the local lattice height, so halo rows past the periodic wrap
 draw the owning row's stream exactly (this is what makes the redundant
 apron compute of intermediate steps bit-exact).
+
+Extended-shard mode (``global_mod``): under shard_map each device holds a
+band of a larger lattice plus a depth-``d`` apron of exchanged neighbour
+rows (and one halo word per x side) -- the time-extended version of the
+paper's PThreads row bands.  The local array is then *not* periodic: the
+y halo must come from the apron rows already present in the input, so the
+band index maps clamp at the array edge instead of wrapping, and the
+RNG / parity counters reduce the **global** coordinates
+``(y0 + local_row) mod H_g`` and ``(xw0 + word) mod Wd_g`` (both global
+extents threaded through the scalar block) so every apron row draws the
+owning shard's stream bit-exactly.  Rows within T of the array edge (and
+the low/high bits of the edge words) compute with clamped-garbage halos;
+each launch therefore shrinks the valid region by T rows per side and one
+lattice column per step, exactly the validity discipline of
+``core/distributed.py``'s halo-widening.  When the launch has a single
+row band per lane (``block_rows`` covers the padded height), each grid
+step reads its whole lane before writing it, so the output may alias the
+input plane stack (``input_output_aliases``) and the multi-launch carry
+updates in place instead of double-buffering in HBM.  With multiple
+bands, aliasing would be a program-order read-after-write hazard -- grid
+step i reads band i-1, which step i-1 just wrote; only the VMEM prefetch
+racing ahead of the writeback could save it, and that ordering is not
+guaranteed on real hardware -- so multi-band launches never alias.
 """
 from __future__ import annotations
 
@@ -140,18 +163,18 @@ def _bernoulli_words(rows, cols, t, pq: int, salt: int) -> jnp.ndarray:
     return res
 
 
-def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, xw0, t,
+def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
                 pq: int, rng_in_kernel: bool, variant: str,
                 chi_pre=None, acc_pre=None) -> jnp.ndarray:
     """One stream->collide(->force) update of an extended row stack.
 
     ``cur`` is ``(8, n, wd)``; the result is the ``(8, n-2, wd)`` interior
     (each step consumes one apron row per side).  ``rows_abs`` is the
-    ``(n, 1)`` int32 array of RNG/parity row coordinates of ``cur``'s rows
-    (global offset applied, periodic wrap already reduced).
+    ``(n, 1)`` int32 array of RNG/parity row coordinates of ``cur``'s rows,
+    ``cols_abs`` the ``(1, wd)`` int32 array of RNG word coordinates
+    (global offsets applied, periodic wrap already reduced).
     """
     n = cur.shape[1]
-    wd = cur.shape[-1]
     even = (rows_abs % 2) == 0
 
     # --- stream (paper's "motion", Listing 1) -------------------------------
@@ -173,8 +196,7 @@ def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, xw0, t,
     tt = jnp.asarray(t, _U32)
     if rng_in_kernel:
         rows_blk = rows_abs[1:n - 1].astype(_U32)
-        cols_blk = jnp.asarray(xw0, _U32) + jax.lax.broadcasted_iota(
-            _U32, (1, wd), 1)
+        cols_blk = cols_abs.astype(_U32)
         chi = _word_u32(rows_blk, cols_blk, tt, salt=0x11)
     else:
         chi = chi_pre
@@ -192,17 +214,25 @@ def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, xw0, t,
 
 def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
                h: int, bh: int, pq: int, steps: int, rng_in_kernel: bool,
-               variant: str = "fhp2"):
+               variant: str = "fhp2", extended: bool = False):
     """``steps`` fused FHP updates for a band of ``bh`` rows.
 
     Refs (inputs first, output last, per pallas_call convention): the
-    scalar block ``[t, y0, xw0]`` (step counter + global coordinates of
-    local element (0,0) -- traced, so the kernel composes with shard_map
-    where the offsets are axis-index dependent), the three overlapping
-    row-band views of the plane stack, then -- when ``rng_in_kernel`` is
-    False (T=1 only) -- the precomputed chirality / force planes for the
-    band, and finally the output band.  Grid is ``(B, H/bh)``: axis 0 is
-    the ensemble lane, axis 1 the row band.
+    scalar block ``[t, y0, xw0, hg, wdg]`` (step counter + global
+    coordinates of local element (0,0) + global lattice extents in rows /
+    words -- traced, so the kernel composes with shard_map where the
+    offsets are axis-index dependent), the three overlapping row-band
+    views of the plane stack, then -- when ``rng_in_kernel`` is False
+    (T=1 only) -- the precomputed chirality / force planes for the band,
+    and finally the output band.  Grid is ``(B, H/bh)``: axis 0 is the
+    ensemble lane, axis 1 the row band.
+
+    ``extended`` selects the non-wrapping shard mode: RNG / parity rows
+    reduce the *global* row ``(y0 + local) mod hg`` and words reduce
+    ``(xw0 + word) mod wdg``, so apron rows (including those past the
+    global periodic wrap, e.g. shard 0's top halo) reproduce the owning
+    shard's stream; the periodic-mode local reduction ``y0 + local mod h``
+    cannot express that.
     """
     out_ref = rest[-1]
     extra_refs = rest[:-1]
@@ -211,28 +241,44 @@ def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
     y0 = s_ref[0, 1]
     xw0 = s_ref[0, 2]
     T = steps
+    wd = mid_ref.shape[-1]
+
+    # RNG word coordinates of the block's words (the x direction is
+    # un-blocked, so these are launch-wide constants).
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (1, wd), 1)
+    cols_abs = xw0 + col_iota
+    if extended:
+        cols_abs = cols_abs % s_ref[0, 4]          # mod Wd_g: global words
 
     # Overlapping read: T halo rows above = tail of the upper band, T halo
-    # rows below = head of the lower band (index maps wrap, so the global y
-    # wrap matches the jnp.roll reference exactly).
+    # rows below = head of the lower band.  In periodic mode the band index
+    # maps wrap, so the global y wrap matches the jnp.roll reference
+    # exactly; in extended mode they clamp (the halo is apron data already
+    # inside the array, and edge bands compute garbage only in rows the
+    # validity contract drops).
     cur = jnp.concatenate(
         [up_ref[0, :, bh - T:bh, :], mid_ref[0], down_ref[0, :, 0:T, :]],
         axis=1)
 
     for s in range(T):
         n = cur.shape[1]                      # bh + 2 * (T - s)
-        # Local row of cur row r is  i*bh - (T - s) + r, reduced mod the
-        # lattice height so rows past the periodic wrap hash (and stream
-        # with the parity of) the owning row's coordinates -- required for
-        # the intermediate-step apron rows to be bit-exact.
+        # Local row of cur row r is  i*bh - (T - s) + r.  Periodic mode
+        # reduces it mod the *local* lattice height so rows past the local
+        # wrap hash (and stream with the parity of) the owning row's
+        # coordinates; extended mode reduces the *global* row mod H_g so
+        # apron rows across the global wrap draw the owning shard's stream
+        # -- required for the intermediate-step apron rows to be bit-exact.
         row_iota = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
-        rows_abs = y0 + (i * bh - (T - s) + row_iota) % h
+        if extended:
+            rows_abs = (y0 + i * bh - (T - s) + row_iota) % s_ref[0, 3]
+        else:
+            rows_abs = y0 + (i * bh - (T - s) + row_iota) % h
         if rng_in_kernel:
-            cur = _fused_step(cur, rows_abs, xw0, t0 + s, pq,
+            cur = _fused_step(cur, rows_abs, cols_abs, t0 + s, pq,
                               True, variant)
         else:
-            cur = _fused_step(cur, rows_abs, xw0, t0 + s, pq, False, variant,
-                              chi_pre=extra_refs[0][...],
+            cur = _fused_step(cur, rows_abs, cols_abs, t0 + s, pq, False,
+                              variant, chi_pre=extra_refs[0][...],
                               acc_pre=extra_refs[-1][...] if pq > 0 else None)
 
     out_ref[0] = cur
@@ -240,21 +286,40 @@ def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
 
 def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
                   rng_in_kernel: bool, interpret: bool,
-                  variant: str = "fhp2", steps: int = 1, batch: int = 1):
-    """Build the pallas_call for a (B, 8, h, wd) plane stack."""
+                  variant: str = "fhp2", steps: int = 1, batch: int = 1,
+                  extended: bool = False, donate: bool = False):
+    """Build the pallas_call for a (B, 8, h, wd) plane stack.
+
+    ``extended`` builds the non-wrapping shard-mode kernel (clamped band
+    maps + global-coordinate RNG; see module docstring).  ``donate``
+    aliases the plane-stack input to the output (no HBM double-buffer);
+    only legal in extended mode with a single row band per lane (``bh ==
+    h``), where every grid step reads its whole lane before writing --
+    multi-band grids would read band i-1 after step i-1's writeback (see
+    module docstring).
+    """
     assert h % bh == 0, f"H={h} must be a multiple of block_rows={bh}"
     assert 1 <= steps <= bh, \
         f"steps_per_launch={steps} needs a {steps}-row halo <= block_rows={bh}"
     assert rng_in_kernel or steps == 1, \
         "precomputed RNG planes only cover one step: steps_per_launch == 1"
+    assert not donate or (extended and bh == h), \
+        "input_output_aliases needs extended mode and a single row band " \
+        "(multi-band in-place update is a read-after-write hazard)"
     nb = h // bh
 
     band = lambda f: pl.BlockSpec((1, 8, bh, wd), f)
+    if extended:
+        up = band(lambda b, i: (b, 0, jnp.maximum(i - 1, 0), 0))
+        down = band(lambda b, i: (b, 0, jnp.minimum(i + 1, nb - 1), 0))
+    else:
+        up = band(lambda b, i: (b, 0, (i + nb - 1) % nb, 0))
+        down = band(lambda b, i: (b, 0, (i + 1) % nb, 0))
     in_specs = [
-        pl.BlockSpec((1, 3), lambda b, i: (0, 0)),            # [t, y0, xw0]
-        band(lambda b, i: (b, 0, (i + nb - 1) % nb, 0)),      # upper halo band
-        band(lambda b, i: (b, 0, i, 0)),                      # own band
-        band(lambda b, i: (b, 0, (i + 1) % nb, 0)),           # lower halo band
+        pl.BlockSpec((1, 5), lambda b, i: (0, 0)),   # [t, y0, xw0, hg, wdg]
+        up,                                           # upper halo band
+        band(lambda b, i: (b, 0, i, 0)),              # own band
+        down,                                         # lower halo band
     ]
     if not rng_in_kernel:
         in_specs.append(pl.BlockSpec((bh, wd), lambda b, i: (i, 0)))   # chi
@@ -263,12 +328,14 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
                 pl.BlockSpec((bh, wd), lambda b, i: (i, 0)))           # accel
 
     kern = functools.partial(fhp_kernel, h=h, bh=bh, pq=pq, steps=steps,
-                             rng_in_kernel=rng_in_kernel, variant=variant)
+                             rng_in_kernel=rng_in_kernel, variant=variant,
+                             extended=extended)
     return pl.pallas_call(
         kern,
         grid=(batch, nb),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 8, bh, wd), lambda b, i: (b, 0, i, 0)),
         out_shape=jax.ShapeDtypeStruct((batch, 8, h, wd), jnp.uint32),
+        input_output_aliases={1: 0} if donate else {},
         interpret=interpret,
     )

@@ -5,10 +5,16 @@
 ``t / p_force / y0 / xw0``) that also accepts a leading ensemble batch
 axis and ``steps_per_launch`` = T fused steps per kernel launch;
 ``run_pallas`` advances many steps with a donated carry, launching the
-multi-step kernel ``steps // T`` times (plus a single-step remainder).
-``autotune_launch`` picks ``(block_rows, steps_per_launch)`` under the
-VMEM budget from a bytes-per-site-update model.  On non-TPU backends the
-kernel runs in interpret mode.
+multi-step kernel ``steps // T`` times (plus one ``steps % T``-step
+remainder launch).  ``run_extended`` is the shard-map hot path: it
+advances a halo-extended shard array ``depth`` steps in ceil(depth/T)
+donated launches with **global**-coordinate RNG (mod ``hg``/``wdg``), so
+one depth-``d`` exchange feeds ``d`` in-kernel steps.  ``autotune_launch``
+picks ``(block_rows, steps_per_launch)`` -- or, given ``max_depth``, the
+joint ``(block_rows, steps_per_launch, depth)`` for the sharded path
+including the exchange bandwidth + latency terms -- under the VMEM budget
+from a bytes-per-site-update model.  On non-TPU backends the kernel runs
+in interpret mode.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import prng
 from repro.kernels.fhp_step import kernel as _k
+from repro.roofline import analysis as _roofline
 
 # v5e VMEM is ~128 MiB but a realistic per-kernel working-set budget is far
 # smaller; we keep the resident blocks (3 input bands + 1 output band +
@@ -47,17 +54,32 @@ def vmem_bytes(bh: int, wd: int, steps: int = 1) -> int:
     return 4 * band + ext + temps
 
 
+def _pick_bh(wd: int, steps: int, h: int | None) -> int:
+    """Largest power-of-two band height (<=32) that admits the
+    ``steps``-row halo, fits VMEM, and (when ``h`` is given) divides H."""
+    def ok(bh):
+        return ((h is None or h % bh == 0)
+                and vmem_bytes(bh, wd, steps) <= VMEM_BUDGET_BYTES)
+    bh = 32
+    while bh > steps and not ok(bh):
+        bh //= 2
+    if bh < steps or not ok(bh):
+        raise ValueError(f"no valid block for H={h}, Wd={wd}, "
+                         f"steps_per_launch={steps}")
+    return bh
+
+
 def pick_block_rows(h: int, wd: int, steps: int = 1) -> int:
     """Largest power-of-two band height (<=32) that divides H, admits the
     ``steps``-row halo, and fits VMEM."""
-    bh = 32
-    while bh > steps and (h % bh or vmem_bytes(bh, wd, steps)
-                          > VMEM_BUDGET_BYTES):
-        bh //= 2
-    if h % bh or bh < steps or vmem_bytes(bh, wd, steps) > VMEM_BUDGET_BYTES:
-        raise ValueError(
-            f"no valid block for H={h}, Wd={wd}, steps_per_launch={steps}")
-    return bh
+    return _pick_bh(wd, steps, h)
+
+
+def pick_block_rows_extended(wd: int, steps: int = 1) -> int:
+    """``pick_block_rows`` without the divisibility constraint: the
+    extended-shard path row-pads the array to a block multiple (pad rows
+    sit past the validity region)."""
+    return _pick_bh(wd, steps, None)
 
 
 def launch_cost(bh: int, steps: int) -> float:
@@ -77,44 +99,107 @@ def hbm_bytes_per_site(bh: int, steps: int) -> float:
     return 8 * 4 * ((bh + 2 * steps) + bh) / (32.0 * bh * steps)
 
 
+def sharded_hbm_bytes_per_site(bh: int, steps: int, depth: int,
+                               hl: int, wdl: int) -> float:
+    """Modeled HBM traffic per useful site update of the sharded
+    extended-shard path (``roofline.analysis.sharded_fhp_traffic``)."""
+    return _roofline.sharded_fhp_traffic(
+        hl, wdl, depth=depth, T=steps,
+        block_rows=bh)["hbm_bytes_per_site_step"]
+
+
+def sharded_launch_cost(bh: int, steps: int, depth: int,
+                        hl: int, wdl: int) -> float:
+    """Modeled seconds per useful site update for the sharded path: HBM +
+    weighted apron compute + exchange bandwidth + exchange latency."""
+    return _roofline.sharded_fhp_traffic(
+        hl, wdl, depth=depth, T=steps, block_rows=bh,
+        compute_row_weight=COMPUTE_ROW_WEIGHT)["total_s_per_site"]
+
+
 def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
-                    vmem_budget: int = VMEM_BUDGET_BYTES) -> Tuple[int, int]:
-    """Choose ``(block_rows, steps_per_launch)`` minimizing ``launch_cost``
-    subject to divisibility, halo depth <= block_rows, and the VMEM budget.
+                    vmem_budget: int = VMEM_BUDGET_BYTES,
+                    max_depth: int | None = None):
+    """Choose the launch configuration minimizing modeled cost under the
+    VMEM budget.
+
+    Single-device (``max_depth=None``): returns ``(block_rows,
+    steps_per_launch)`` minimizing ``launch_cost`` subject to
+    divisibility and halo depth <= block_rows.
+
+    Sharded (``max_depth`` set): ``h``/``wd`` are the per-shard ``hl`` /
+    ``wdl``; returns the joint ``(block_rows, steps_per_launch, depth)``
+    minimizing ``sharded_launch_cost`` -- HBM traffic of the extended
+    array plus the exchange bandwidth and per-exchange latency terms, so
+    deeper halos win exactly until apron redundancy outgrows the
+    amortised exchange cost.  The extended path has no divisibility
+    constraint (rows are padded), but the T-row halo must fit the block
+    and the depth must fit the one-word x halo (depth <= 31).
     """
     best = None
     best_cost = None
+    if max_depth is None:
+        bh = 32
+        while bh >= 1:
+            if h % bh == 0:
+                for steps in range(1, min(bh, max_steps) + 1):
+                    if vmem_bytes(bh, wd, steps) > vmem_budget:
+                        break
+                    cost = launch_cost(bh, steps)
+                    if best_cost is None or cost < best_cost:
+                        best, best_cost = (bh, steps), cost
+            bh //= 2
+        if best is None:
+            raise ValueError(f"no valid launch config for H={h}, Wd={wd}")
+        return best
+
+    hl, wdl = h, wd
     bh = 32
     while bh >= 1:
-        if h % bh == 0:
-            for steps in range(1, min(bh, max_steps) + 1):
-                if vmem_bytes(bh, wd, steps) > vmem_budget:
+        # depth <= hl: the nearest-neighbour exchange cannot source a
+        # deeper apron than one shard's rows (distributed.py asserts it).
+        for depth in range(1, min(max_depth, 31, hl) + 1):
+            for steps in range(1, min(bh, max_steps, depth) + 1):
+                if vmem_bytes(bh, wdl + 2, steps) > vmem_budget:
                     break
-                cost = launch_cost(bh, steps)
+                cost = sharded_launch_cost(bh, steps, depth, hl, wdl)
                 if best_cost is None or cost < best_cost:
-                    best, best_cost = (bh, steps), cost
+                    best, best_cost = (bh, steps, depth), cost
         bh //= 2
     if best is None:
-        raise ValueError(f"no valid launch config for H={h}, Wd={wd}")
+        raise ValueError(f"no valid sharded launch config for "
+                         f"hl={hl}, wdl={wdl}")
     return best
 
 
 @functools.partial(jax.jit, static_argnames=(
     "p_force", "block_rows", "rng_in_kernel", "interpret", "variant",
-    "steps_per_launch"))
+    "steps_per_launch", "extended", "hg", "wdg", "donate"))
 def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
                     y0=0, xw0=0, block_rows: int = 0,
                     rng_in_kernel: bool = True,
                     interpret: bool | None = None,
                     variant: str = "fhp2",
-                    steps_per_launch: int = 1) -> jnp.ndarray:
+                    steps_per_launch: int = 1,
+                    extended: bool = False,
+                    hg: int | None = None, wdg: int | None = None,
+                    donate: bool = False) -> jnp.ndarray:
     """``steps_per_launch`` fused stream+collide(+force) FHP steps in one
     kernel launch, on ``(8, H, Wd)`` or batched ``(B, 8, H, Wd)`` uint32
     planes (ensemble lanes; all lanes share the RNG stream).
 
     ``y0``/``xw0`` (global coordinates of local element (0,0)) may be
     traced -- they ride into the kernel in the scalar block, so the kernel
-    composes with shard_map (per-shard offsets from axis_index)."""
+    composes with shard_map (per-shard offsets from axis_index).
+
+    ``extended`` runs the non-wrapping shard mode on a halo-extended
+    array: ``hg``/``wdg`` are the **global** lattice extents (rows /
+    packed words) the RNG and parity counters reduce mod, so apron rows
+    and halo words -- including those across the global periodic wrap --
+    draw the owning shard's stream bit-exactly.  Each extended launch
+    shrinks the valid region by ``steps_per_launch`` rows per side and
+    one lattice column per step.  ``donate`` aliases the plane input to
+    the output (extended mode only)."""
     squeeze = planes.ndim == 3
     if squeeze:
         planes = planes[None]
@@ -123,7 +208,17 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
     if T != 1 and not rng_in_kernel:
         raise ValueError("steps_per_launch > 1 requires rng_in_kernel=True "
                          "(precomputed RNG planes cover a single step)")
-    bh = block_rows or pick_block_rows(h, wd, steps=T)
+    if extended:
+        if not rng_in_kernel:
+            raise ValueError("extended mode draws global-coordinate RNG "
+                             "in-kernel (rng_in_kernel=True)")
+        if hg is None or wdg is None:
+            raise ValueError("extended mode needs the global extents hg/wdg")
+    elif donate:
+        raise ValueError("donate=True needs extended mode (periodic band "
+                         "maps re-read written bands)")
+    bh = block_rows or (pick_block_rows_extended(wd, steps=T) if extended
+                        else pick_block_rows(h, wd, steps=T))
     if T > bh:
         raise ValueError(f"steps_per_launch={T} > block_rows={bh}")
     if interpret is None:
@@ -132,10 +227,14 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
 
     step = _k.make_fhp_step(h, wd, bh=bh, pq=pq,
                             rng_in_kernel=rng_in_kernel, interpret=interpret,
-                            variant=variant, steps=T, batch=b)
+                            variant=variant, steps=T, batch=b,
+                            extended=extended, donate=donate)
     scalars = jnp.stack([jnp.asarray(t, jnp.int32),
                          jnp.asarray(y0, jnp.int32),
-                         jnp.asarray(xw0, jnp.int32)]).reshape(1, 3)
+                         jnp.asarray(xw0, jnp.int32),
+                         jnp.asarray(h if hg is None else hg, jnp.int32),
+                         jnp.asarray(wd if wdg is None else wdg,
+                                     jnp.int32)]).reshape(1, 5)
     args = [scalars, planes, planes, planes]
     if not rng_in_kernel:
         args.append(prng.chirality_words((h, wd), t, y0=y0, xw0=xw0))
@@ -151,7 +250,8 @@ def run_pallas(planes: jnp.ndarray, steps: int, *, p_force: float = 0.0,
     """Advance ``steps`` fused steps (fori_loop carry, donable).
 
     With ``steps_per_launch`` = T > 1 the plane stack crosses HBM once per
-    T steps; ``steps % T`` trailing steps run as single-step launches.
+    T steps; the ``steps % T`` trailing steps run as **one** launch with
+    ``steps_per_launch = rem`` (one more HBM round trip, not rem of them).
     Bit-identical to the T=1 path for any T (equivalence-tested)."""
     T = int(steps_per_launch)
     full, rem = divmod(int(steps), T)
@@ -161,8 +261,53 @@ def run_pallas(planes: jnp.ndarray, steps: int, *, p_force: float = 0.0,
                                steps_per_launch=T, **kw)
 
     out = jax.lax.fori_loop(0, full, body, planes)
+    if rem:
+        out = fhp_step_pallas(out, t0 + full * T, p_force=p_force,
+                              steps_per_launch=rem, **kw)
+    return out
 
-    def tail(i, s):
-        return fhp_step_pallas(s, t0 + full * T + i, p_force=p_force, **kw)
 
-    return jax.lax.fori_loop(0, rem, tail, out)
+def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
+                 y0=0, xw0=0, hg: int, wdg: int,
+                 steps_per_launch: int | None = None,
+                 block_rows: int = 0, **kw) -> jnp.ndarray:
+    """Advance a halo-extended shard array ``steps`` steps in
+    ceil(steps / T) extended-mode launches (carry aliased in place when
+    the launch is single-band; see ``kernel.make_fhp_step``).
+
+    ``ext`` is the ``(..., 8, He, Wde)`` shard + apron (``He`` rows are
+    row-padded here to a block multiple; pad rows sit past the validity
+    region and are dropped by the caller's interior slice).  ``y0``/
+    ``xw0`` are the global coordinates of ext element (0, 0) -- i.e. of
+    the *apron* corner -- and may be traced.  After the call, rows
+    ``[steps, He - steps)`` and words ``[1, Wde - 1)`` of the result hold
+    the stepped shard (validity shrinks ``steps`` rows per side and one
+    lattice column per step; the usual call has ``He = hl + 2*steps``
+    so exactly the owned block survives)."""
+    steps = int(steps)
+    T = int(steps_per_launch or min(steps, MAX_STEPS_PER_LAUNCH))
+    he, wde = ext.shape[-2], ext.shape[-1]
+    cap = 1
+    while cap < he:           # no taller than the array: padding is traffic
+        cap *= 2
+    bh = block_rows or min(cap,
+                           pick_block_rows_extended(wde, steps=min(T, steps)))
+    pad = (-he) % bh
+    if pad:
+        widths = [(0, 0)] * (ext.ndim - 2) + [(0, pad), (0, 0)]
+        ext = jnp.pad(ext, widths)
+    # In-place carry (input_output_aliases) is only race-free when one
+    # band covers the lane: see kernel.make_fhp_step.
+    donate = bh == ext.shape[-2]
+    full, rem = divmod(steps, T)
+    for j in range(full):
+        ext = fhp_step_pallas(ext, t0 + j * T, p_force=p_force, y0=y0,
+                              xw0=xw0, steps_per_launch=T, block_rows=bh,
+                              extended=True, hg=hg, wdg=wdg, donate=donate,
+                              **kw)
+    if rem:
+        ext = fhp_step_pallas(ext, t0 + full * T, p_force=p_force, y0=y0,
+                              xw0=xw0, steps_per_launch=rem, block_rows=bh,
+                              extended=True, hg=hg, wdg=wdg, donate=donate,
+                              **kw)
+    return ext[..., :he, :]

@@ -232,6 +232,91 @@ def hbm_bytes_estimate(hlo_text: str, mode: str = "fused") -> float:
     return total
 
 
+# ---------------------------------------------------------------------------
+# Sharded temporal-blocking traffic model (FHP extended-shard hot path).
+#
+# Each shard owns ``hl`` rows x ``wdl`` packed words of the global lattice
+# and exchanges a depth-``d`` halo (2d rows + 2 words per round) to run d
+# local steps per ppermute round, executed as ceil(d/T) fused Pallas
+# launches of T in-kernel steps on the (hl + 2d)-row extended array.  The
+# model prices the three costs the (block_rows, T, depth) autotuner trades:
+#
+#   HBM      -- the extended stack crosses HBM once per launch plus the
+#               2T/bh halo-band re-reads of the overlapping BlockSpecs;
+#   ICI      -- halo bytes per exchange, amortised over d steps;
+#   latency  -- a fixed per-exchange term (ppermute round trip + launch
+#               overheads), amortised over d steps -- the paper's
+#               "two barriers per step" cost, and the reason exchange
+#               *count* matters independently of exchange *bytes*.
+#
+# Redundant apron compute is priced in HBM-row-equivalents via
+# ``compute_row_weight`` (the kernel is memory-bound, so apron rows are
+# cheap but not free).  All numbers are per *useful* site update.
+# ---------------------------------------------------------------------------
+
+PLANE_BYTES = 8 * 4            # 8 uint32 bit-planes per word of 32 nodes
+WORD_NODES = 32
+EXCHANGE_LATENCY_S = 3e-6      # fixed cost per halo-exchange round
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
+                        block_rows: int, compute_row_weight: float = 0.2,
+                        exchange_latency_s: float = EXCHANGE_LATENCY_S,
+                        hw: HW = V5E) -> Dict[str, float]:
+    """Modeled per-site-step costs of the sharded Pallas hot path.
+
+    Returns a dict with ``hbm_bytes_per_site_step`` (the headline number:
+    acceptance target <= 0.6 at depth >= 4), ``ici_bytes_per_site_step``,
+    ``exchanges_per_step``, ``launches_per_step``, and the roofline-style
+    time decomposition ``{hbm,compute,ici,latency,total}_s_per_site``.
+    """
+    assert 1 <= T <= block_rows and 1 <= depth, (T, block_rows, depth)
+    he = hl + 2 * depth
+    he_p = _ceil_to(he, block_rows)            # row-padded extended height
+    nb = he_p // block_rows
+    # Launch schedule: full T-step launches plus one rem-step tail launch.
+    ts = [T] * (depth // T) + ([depth % T] if depth % T else [])
+    sites = float(hl * wdl * WORD_NODES)       # useful sites per shard step
+
+    # HBM: per launch, every band reads bh + 2*Tj rows and writes bh rows.
+    hbm_rows = sum(nb * (block_rows + 2 * tj) + he_p for tj in ts)
+    hbm_b = PLANE_BYTES * (wdl + 2) * hbm_rows / (sites * depth)
+
+    # Redundant compute: step s of a Tj-launch updates bh + 2*(Tj - s - 1)
+    # rows per band; useful work is hl rows per global step.
+    comp_rows = sum(nb * (block_rows + 2 * (tj - s - 1))
+                    for tj in ts for s in range(tj))
+    comp_b = (compute_row_weight * PLANE_BYTES * (wdl + 2) * comp_rows
+              / (sites * depth))
+
+    # ICI: per exchange each shard sends depth rows up + depth rows down of
+    # the x-extended width, plus one word column each side for the x halo.
+    ici_exchange_b = PLANE_BYTES * (2 * depth * (wdl + 2) + 2 * hl)
+    ici_b = ici_exchange_b / (sites * depth)
+
+    lat_s = exchange_latency_s / (sites * depth)
+    hbm_s = hbm_b / hw.hbm_bw
+    comp_s = comp_b / hw.hbm_bw
+    ici_s = ici_b / hw.ici_bw
+    return {
+        "hbm_bytes_per_site_step": hbm_b,
+        "compute_row_equiv_bytes_per_site_step": comp_b,
+        "ici_bytes_per_site_step": ici_b,
+        "ici_bytes_per_exchange": float(ici_exchange_b),
+        "exchanges_per_step": 1.0 / depth,
+        "launches_per_step": len(ts) / depth,
+        "hbm_s_per_site": hbm_s,
+        "compute_s_per_site": comp_s,
+        "ici_s_per_site": ici_s,
+        "latency_s_per_site": lat_s,
+        "total_s_per_site": hbm_s + comp_s + ici_s + lat_s,
+    }
+
+
 def roofline_terms(flops: float, bytes_: float, coll_bytes: float,
                    hw: HW = V5E) -> Dict[str, float]:
     t_c = flops / hw.peak_flops

@@ -3,4 +3,23 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Fast deterministic core modules: the tier-1 CI gate (benchmarks/ci.sh
+# runs ``pytest -m tier1 -x -q``; the full suite is far slower than the
+# 120 s budget because of the multi-device subprocess tests).  Tests
+# marked ``slow`` are excluded even inside these modules.
+_TIER1_MODULES = {
+    "test_rules", "test_prng", "test_roofline", "test_propagation",
+    "test_substrate", "test_fhp3", "test_equivalence", "test_kernels",
+    "test_temporal", "test_sharded_pallas",
+}
+
+
+def pytest_collection_modifyitems(items):
+    for item in items:
+        mod = item.module.__name__.rsplit(".", 1)[-1]
+        if mod in _TIER1_MODULES and "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)
