@@ -8,6 +8,10 @@
 # budget -- run it with plain ``pytest -q`` when touching the distributed
 # or launch layers.  The smoke benchmark rewrites BENCH_kernel.json with
 # at least one real timed record per impl plus the structural model rows.
+# The scenario smoke sweep (every registered scenario, tiny lattice,
+# sharded static-geometry path, bit-exactness + mass-conservation
+# asserts) runs inside ``benchmarks.run --smoke`` via bench_scenarios --
+# its assertions gate CI alongside the tier-1 tests.
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -9,6 +9,8 @@ Fig. 10  -> bench_fig10   (USD/Mups, Watt/Mups)
 kernel   -> bench_kernel  (fused-kernel structure: blocks, VMEM, B/site)
 temporal -> bench_temporal (steps-per-launch x ensemble-lane sweep)
 distributed -> bench_distributed ((depth, T, use_pallas) sharded sweep)
+scenarios -> bench_scenarios (registered geometries through the sharded
+             static-geometry path; bit-exactness + exchange-byte model)
 
 The kernel-shaped benches (kernel, temporal, distributed) also return
 machine-readable records; this driver persists them to
@@ -35,7 +37,8 @@ def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     smoke = "--smoke" in argv
     from benchmarks import (bench_distributed, bench_fig9, bench_fig10,
-                            bench_kernel, bench_table1, bench_temporal)
+                            bench_kernel, bench_scenarios, bench_table1,
+                            bench_temporal)
     records = []
     paper_benches = [] if smoke else [
         ("table1", bench_table1), ("fig9", bench_fig9),
@@ -46,7 +49,8 @@ def main(argv=None) -> None:
         mod.main()
         print(f"-- {name} done in {time.time() - t0:.1f}s --\n")
     for name, mod in [("kernel", bench_kernel), ("temporal", bench_temporal),
-                      ("distributed", bench_distributed)]:
+                      ("distributed", bench_distributed),
+                      ("scenarios", bench_scenarios)]:
         print(f"== {name} ==")
         t0 = time.time()
         records.extend(mod.main(smoke=smoke or None) or [])

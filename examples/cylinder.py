@@ -1,22 +1,26 @@
 """Flow past a cylinder: the classic FHP demonstration (the paper's
-motivation for arbitrary 2-D geometries, sec. 2).
+motivation for arbitrary 2-D geometries, sec. 2), built from the
+scenario registry (``repro.scenarios``) and run through the fused
+static-geometry kernel path (7 dynamic planes + read-only solid operand).
 
 A solid disk sits in a driven channel; after spin-up the wake behind the
 disk has a velocity deficit and the flow accelerates around the sides
-(continuity).  Run with the fused kernel path.
+(continuity).
+
+Run from the repo root with the package on PYTHONPATH (no path hacks):
 
     PYTHONPATH=src python examples/cylinder.py [--steps 1500]
 """
 import argparse
-import sys
 
-sys.path.insert(0, "src")
+import jax.numpy as jnp
+import numpy as np
 
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.core import bitplane, byte_step  # noqa: E402
-from repro.kernels.fhp_step.ops import run_pallas  # noqa: E402
+from repro import scenarios
+from repro.core import bitplane, byte_step
+from repro.geometry import Disk, rasterize
+from repro.kernels.fhp_step.ops import run_pallas
+from repro.scenarios import observables
 
 
 def main():
@@ -28,16 +32,21 @@ def main():
     ap.add_argument("--p-force", type=float, default=0.03)
     args = ap.parse_args()
 
-    h, w, r = args.height, args.width, args.radius
-    yy, xx = np.mgrid[0:h, 0:w]
-    cy, cx = h // 2, w // 4
-    disk = (yy - cy) ** 2 + (xx - cx) ** 2 <= r * r
-    state = byte_step.make_channel(h, w, density=0.22, seed=0, obstacle=disk)
-    planes = bitplane.pack(jnp.asarray(state))
-    m0 = int(bitplane.density_total(planes))
+    sc = scenarios.get("cylinder", height=args.height, width=args.width,
+                       radius=args.radius, p_force=args.p_force)
+    h, w = sc.height, sc.width
+    # The scenario owns the obstacle: measurement regions derive from it.
+    disk = dict(sc.obstacles)["disk"]
+    cy, cx, r = disk.cy, disk.cx, disk.r
+    planes = sc.initial_planes()
+    m0 = int(observables.mass(planes))
 
-    planes = run_pallas(planes, args.steps, p_force=args.p_force)
-    assert int(bitplane.density_total(planes)) == m0
+    # Static-geometry path: the solid plane rides as a read-only operand.
+    solid = planes[7]
+    dyn = run_pallas(planes[:7], args.steps, p_force=sc.p_force,
+                     solid=solid)
+    planes = jnp.concatenate([dyn, solid[None]], axis=0)
+    assert observables.mass_audit(planes, m0)
 
     out = bitplane.unpack(planes)
     px2, _ = byte_step.momentum(out)
@@ -51,6 +60,7 @@ def main():
     upstream = region_u(cy - r, cy + r, cx - 6 * r, cx - 3 * r)
     wake = region_u(cy - r, cy + r, cx + 2 * r, cx + 5 * r)
     side = region_u(2, cy - 2 * r, cx - r, cx + r)
+    drag = observables.obstacle_report(planes, sc)
 
     print(f"lattice {h}x{w}, disk r={r} at ({cy},{cx}), "
           f"{args.steps} steps, mass conserved: True")
@@ -59,11 +69,12 @@ def main():
           f"{(1 - wake / max(upstream, 1e-9)) * 100:.0f}%)")
     print(f"mean u_x beside  : {side:+.4f}  (bypass acceleration "
           f"{(side / max(upstream, 1e-9) - 1) * 100:+.0f}%)")
+    print(f"momentum on disk (px2, py): {drag['disk']}")
     assert wake < upstream, "wake must show a velocity deficit"
     assert side > wake, "flow must accelerate around the obstacle"
     # interior of the disk stays empty (its perimeter transiently holds
     # particles mid-bounce -- that's the no-slip mechanism itself)
-    interior = (yy - cy) ** 2 + (xx - cx) ** 2 <= (r - 2) ** 2
+    interior = rasterize(Disk(cy, cx, max(r - 2, 0)), (h, w))
     assert int(np.asarray(dens)[interior].sum()) == 0
     print("OK: obstacle wake reproduced")
 

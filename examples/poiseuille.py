@@ -1,22 +1,23 @@
 """Physics validation: body-forced channel flow develops the parabolic
-Poiseuille profile (the standard FHP validation, cf. paper sec. 2).
+Poiseuille profile (the standard FHP validation, cf. paper sec. 2),
+built from the scenario registry (``repro.scenarios``).
 
 Runs a 64 x 512 channel with weak forcing for a few thousand steps,
 averages the per-row x-velocity over the last quarter of the run and fits
 u(y) = a*(y - y0)^2 + c.  Reports R^2 of the parabolic fit.
 
+Run from the repo root with the package on PYTHONPATH (no path hacks):
+
     PYTHONPATH=src python examples/poiseuille.py [--steps 3000]
 """
 import argparse
-import sys
 
-sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.core import bitplane, byte_step  # noqa: E402
+from repro import scenarios
+from repro.core import bitplane
 
 
 def main():
@@ -27,20 +28,21 @@ def main():
     ap.add_argument("--p-force", type=float, default=0.02)
     args = ap.parse_args()
 
-    planes = bitplane.pack(jnp.asarray(byte_step.make_channel(
-        args.height, args.width, density=0.2, seed=1)))
+    sc = scenarios.get("poiseuille", height=args.height, width=args.width,
+                       p_force=args.p_force)
+    planes = sc.initial_planes()
 
     warm = args.steps * 3 // 4
-    planes = bitplane.run_planes(planes, warm, p_force=args.p_force)
+    planes = bitplane.run_planes(planes, warm, p_force=sc.p_force)
 
     # accumulate the profile over the tail of the run
     n_avg = args.steps - warm
     chunk = 50
-    acc = jnp.zeros((args.height,), jnp.float32)
+    acc = jnp.zeros((sc.height,), jnp.float32)
 
     @jax.jit
     def advance(p, t0):
-        return bitplane.run_planes(p, chunk, p_force=args.p_force, t0=t0)
+        return bitplane.run_planes(p, chunk, p_force=sc.p_force, t0=t0)
 
     t = warm
     for _ in range(max(n_avg // chunk, 1)):
@@ -50,7 +52,7 @@ def main():
     prof = np.asarray(acc / max(n_avg // chunk, 1))
 
     # parabola fit over the fluid rows
-    ys = np.arange(1, args.height - 1, dtype=np.float64)
+    ys = np.arange(1, sc.height - 1, dtype=np.float64)
     u = prof[1:-1].astype(np.float64)
     coef = np.polyfit(ys, u, 2)
     fit = np.polyval(coef, ys)

@@ -1,17 +1,16 @@
 """Quickstart: simulate a driven FHP channel for a few hundred steps and
 print conservation + flow diagnostics.
 
+Run from the repo root with the package on PYTHONPATH (no path hacks):
+
     PYTHONPATH=src python examples/quickstart.py [--steps 200]
 """
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+import jax.numpy as jnp
 
-import jax.numpy as jnp  # noqa: E402
-
-from repro.core import bitplane, byte_step  # noqa: E402
+from repro.core import bitplane, byte_step
 
 
 def main():

@@ -1,15 +1,14 @@
 """Batched serving demo: continuous batching over 4 slots, mixed prompt
 lengths, greedy decoding.
 
+Run from the repo root with the package on PYTHONPATH (no path hacks):
+
     PYTHONPATH=src python examples/serve_lm.py
 """
-import sys
 import time
 
-sys.path.insert(0, "src")
-
-import jax  # noqa: E402
-import numpy as np  # noqa: E402
+import jax
+import numpy as np
 
 
 def main():

@@ -2,15 +2,14 @@
 synthetic Zipf stream with checkpointing, then resume once to prove the
 fault-tolerance path.
 
+Run from the repo root with the package on PYTHONPATH (no path hacks):
+
     PYTHONPATH=src python examples/train_lm.py            # reduced (CPU-fast)
     PYTHONPATH=src python examples/train_lm.py --full     # real 100M config
 """
 import argparse
 import logging
-import sys
 import tempfile
-
-sys.path.insert(0, "src")
 
 
 def main():

@@ -20,6 +20,18 @@ any ``d <= 31``.
 Counter-based RNG makes every scheme bit-identical to the single-device
 reference: shards hash *global* (row, word, t) coordinates (mod the global
 extent, so halo regions reproduce the owning shard's stream exactly).
+
+Static-geometry cache: obstacle scenarios carry a solid plane that the
+update never changes, yet the naive scheme re-exchanges its halo every
+round.  ``make_solid_cache`` exchanges the solid plane's depth-apron
+**once per geometry** and keeps the per-shard extended tile; the
+``static_solid`` stepper then moves only the 7 dynamic planes per round
+(a 7/8 cut of exchange bytes) and hands the cached tile to the kernel as
+a read-only operand (``kernels/fhp_step`` static-solid mode, which also
+drops the solid plane from the HBM writeback).  The cached apron holds
+the *true* global solid -- not a validity-shrinking copy -- so one cache
+serves every launch, round, and ensemble lane for the geometry's
+lifetime.
 """
 from __future__ import annotations
 
@@ -77,12 +89,47 @@ def _ring(n: int, up: bool):
            [(k, (k - 1) % n) for k in range(n)]
 
 
+def _exchange_halo(planes, d: int, ny: int, nx: int, y_axes: Axes,
+                   x_axis: str):
+    """x halo first (one word each side), then y halo on the x-extended
+    array -- the corner words ride along with the y rows."""
+    left = lax.ppermute(planes[..., -1:], x_axis, _ring(nx, up=True))
+    right = lax.ppermute(planes[..., :1], x_axis, _ring(nx, up=False))
+    ext = jnp.concatenate([left, planes, right], axis=-1)
+    top = lax.ppermute(ext[..., -d:, :], y_axes, _ring(ny, up=True))
+    bot = lax.ppermute(ext[..., :d, :], y_axes, _ring(ny, up=False))
+    return jnp.concatenate([top, ext, bot], axis=-2)
+
+
+def make_solid_cache(mesh, *, y_axes: Axes = ("data",),
+                     x_axis: str = "model", depth: int = 1):
+    """Build ``extend(solid) -> solid_ext``: the one-per-geometry halo
+    exchange of the static solid plane.
+
+    ``solid`` is the (H, Wd)-sharded packed solid plane; the result holds
+    each shard's (hl + 2*depth, wdl + 2) extended tile (global shape
+    (ny*(hl+2d), nx*(wdl+2)) under the same spec).  Feed it to the
+    ``static_solid`` stepper every round -- the dynamic exchange then
+    moves 7 planes instead of 8.  Because the solid never changes, the
+    apron is exact for the geometry's whole lifetime; rebuild only when
+    the geometry changes."""
+    ny, nx = _mesh_size(mesh, y_axes), _mesh_size(mesh, x_axis)
+
+    def ext_fn(solid: jnp.ndarray) -> jnp.ndarray:
+        assert depth <= solid.shape[-2], \
+            f"depth={depth} > local rows {solid.shape[-2]}"
+        return _exchange_halo(solid, depth, ny, nx, y_axes, x_axis)
+
+    return _shard_map(ext_fn, mesh, (P(y_axes, x_axis),), P(y_axes, x_axis))
+
+
 def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                          x_axis: str = "model", p_force: float = 0.0,
                          depth: int = 1, use_pallas: bool = False,
                          batched: bool = False,
                          steps_per_launch: int | None = None,
-                         block_rows: int = 0):
+                         block_rows: int = 0,
+                         static_solid: bool = False):
     """Build ``step(planes, t) -> planes`` advancing ``depth`` global FHP
     steps per halo exchange under ``shard_map``.
 
@@ -99,6 +146,12 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
     stack (lanes replicated over the mesh, sharded in H/Wd like the
     unbatched case).
 
+    ``static_solid`` returns ``step(dyn, solid_ext, t) -> dyn`` instead:
+    ``dyn`` is the (..., 7, H, Wd) *dynamic* plane stack and ``solid_ext``
+    the cached extended solid tiles from ``make_solid_cache`` (same
+    depth).  Each round then exchanges 7 planes instead of 8; batched
+    lanes share the one geometry.
+
     The returned function is shard_map'ed but not jitted; callers compose it
     (e.g. ``lax.fori_loop`` over exchanges) and jit the whole program.
     """
@@ -106,7 +159,7 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
     spec = lattice_spec(y_axes, x_axis, batched=batched)
     ny, nx = _mesh_size(mesh, y_axes), _mesh_size(mesh, x_axis)
 
-    def chunk(planes: jnp.ndarray, t) -> jnp.ndarray:
+    def chunk(planes: jnp.ndarray, solid_ext, t) -> jnp.ndarray:
         iy, ix = lax.axis_index(y_axes), lax.axis_index(x_axis)
         hl, wdl = planes.shape[-2:]
         d = depth
@@ -115,15 +168,11 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
         # short and the validity accounting silently breaks.
         assert d <= hl, f"depth={d} > local rows hl={hl}: halo would " \
                         f"need rows beyond the nearest-neighbour shard"
+        if static_solid:
+            assert solid_ext.shape == (hl + 2 * d, wdl + 2), \
+                (solid_ext.shape, hl, wdl, d)
 
-        # x halo first (one word each side), then y halo on the x-extended
-        # array -- the corner words ride along with the y rows.
-        left = lax.ppermute(planes[..., -1:], x_axis, _ring(nx, up=True))
-        right = lax.ppermute(planes[..., :1], x_axis, _ring(nx, up=False))
-        ext = jnp.concatenate([left, planes, right], axis=-1)
-        top = lax.ppermute(ext[..., -d:, :], y_axes, _ring(ny, up=True))
-        bot = lax.ppermute(ext[..., :d, :], y_axes, _ring(ny, up=False))
-        ext = jnp.concatenate([top, ext, bot], axis=-2)
+        ext = _exchange_halo(planes, d, ny, nx, y_axes, x_axis)
 
         if use_pallas:
             from repro.kernels.fhp_step.ops import run_extended
@@ -133,8 +182,15 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                                y0=iy * hl - d, xw0=ix * wdl - 1,
                                hg=ny * hl, wdg=nx * wdl,
                                steps_per_launch=steps_per_launch,
-                               block_rows=block_rows)
+                               block_rows=block_rows, solid_ext=solid_ext)
             return out[..., d:d + hl, 1:1 + wdl]
+
+        if static_solid:
+            # jnp fallback: rebuild the 8-plane stack from the cache (the
+            # exchange saving stands; only the local update is fused-off).
+            sol = jnp.broadcast_to(solid_ext,
+                                   ext.shape[:-3] + (1,) + solid_ext.shape)
+            ext = jnp.concatenate([ext, sol], axis=-3)
 
         # Global coordinates (mod global extent) of every ext row/word: the
         # RNG draws of halo cells must match the owning shard's draws.
@@ -153,21 +209,55 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
             ext = one(ext, t)
         else:
             ext = lax.fori_loop(0, d, lambda j, s: one(s, t + j), ext)
+        if static_solid:
+            ext = ext[..., :7, :, :]
         return ext[..., d:d + hl, 1:1 + wdl]
 
-    return _shard_map(chunk, mesh, (spec, P()), spec)
+    if static_solid:
+        return _shard_map(chunk, mesh, (spec, P(y_axes, x_axis), P()), spec)
+    return _shard_map(lambda planes, t: chunk(planes, None, t), mesh,
+                      (spec, P()), spec)
 
 
 def make_run(mesh, steps: int, **kw):
-    """Jittable ``run(planes, t0)`` advancing ``steps`` global steps."""
+    """Jittable ``run(planes, t0)`` advancing ``steps`` global steps.
+
+    With ``static_solid=True`` the caller still passes the full 8-plane
+    stack: the solid plane is split off, its apron exchanged **once**
+    (``make_solid_cache`` -- hoisted out of the exchange loop under jit),
+    and the loop advances the 7 dynamic planes against the cached tile;
+    the unchanged solid plane is stitched back into the result.  Batched
+    stacks share lane 0's geometry (ensemble diversity enters through the
+    initial conditions, not the obstacles)."""
     depth = kw.get("depth", 1)
+    static_solid = kw.get("static_solid", False)
     assert steps % depth == 0, (steps, depth)
     stepper = make_sharded_stepper(mesh, **kw)
 
+    if not static_solid:
+        def run(planes, t0):
+            def body(i, s):
+                return stepper(s, t0 + i * depth)
+            return lax.fori_loop(0, steps // depth, body, planes)
+
+        return run
+
+    cache = make_solid_cache(mesh, y_axes=kw.get("y_axes", ("data",)),
+                             x_axis=kw.get("x_axis", "model"), depth=depth)
+    batched = kw.get("batched", False)
+
     def run(planes, t0):
+        dyn = planes[..., :7, :, :]
+        solid = planes[..., 7, :, :]
+        if batched:
+            solid = solid[0]          # lanes share the geometry
+        solid_ext = cache(solid)      # one exchange per geometry
+
         def body(i, s):
-            return stepper(s, t0 + i * depth)
-        return lax.fori_loop(0, steps // depth, body, planes)
+            return stepper(s, solid_ext, t0 + i * depth)
+
+        dyn = lax.fori_loop(0, steps // depth, body, dyn)
+        return jnp.concatenate([dyn, planes[..., 7:, :, :]], axis=-3)
 
     return run
 

@@ -79,6 +79,23 @@ bands, aliasing would be a program-order read-after-write hazard -- grid
 step i reads band i-1, which step i-1 just wrote; only the VMEM prefetch
 racing ahead of the writeback could save it, and that ordering is not
 guaranteed on real hardware -- so multi-band launches never alias.
+
+Static-geometry mode (``static_solid``): the solid plane is invariant
+under the full update (streaming passes it through, collision's
+bounce-back reads but never writes it), so for obstacle scenarios it is
+dead weight in the output stream and -- sharded -- in every halo
+exchange.  With ``static_solid`` the plane stack carries only the 7
+*dynamic* planes (6 moving + rest) and the solid plane enters as a
+separate read-only operand with its own three overlapping band views
+(wrapping in periodic mode, clamped in extended mode, exactly like the
+dynamic bands); each unrolled step slices the solid band to the current
+working extent.  The kernel then writes 7 planes instead of 8 per launch
+(~12.5% of the write traffic), and the sharded path exchanges 7 planes
+per round while the pre-extended solid tile is cached per shard
+(``core.distributed.make_solid_cache``) -- exchanged once per geometry,
+not once per round.  All lanes of a batched launch share the one solid
+operand (geometry is ensemble-invariant; diversity enters through the
+initial conditions).
 """
 from __future__ import annotations
 
@@ -165,14 +182,17 @@ def _bernoulli_words(rows, cols, t, pq: int, salt: int) -> jnp.ndarray:
 
 def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
                 pq: int, rng_in_kernel: bool, variant: str,
-                chi_pre=None, acc_pre=None) -> jnp.ndarray:
+                chi_pre=None, acc_pre=None, solid=None) -> jnp.ndarray:
     """One stream->collide(->force) update of an extended row stack.
 
-    ``cur`` is ``(8, n, wd)``; the result is the ``(8, n-2, wd)`` interior
-    (each step consumes one apron row per side).  ``rows_abs`` is the
-    ``(n, 1)`` int32 array of RNG/parity row coordinates of ``cur``'s rows,
-    ``cols_abs`` the ``(1, wd)`` int32 array of RNG word coordinates
-    (global offsets applied, periodic wrap already reduced).
+    ``cur`` is ``(8, n, wd)`` -- or ``(7, n, wd)`` dynamic planes when the
+    static ``solid`` interior rows ``(n-2, wd)`` are passed separately --
+    and the result keeps the plane count while shrinking to the interior
+    ``n-2`` rows (each step consumes one apron row per side).
+    ``rows_abs`` is the ``(n, 1)`` int32 array of RNG/parity row
+    coordinates of ``cur``'s rows, ``cols_abs`` the ``(1, wd)`` int32
+    array of RNG word coordinates (global offsets applied, periodic wrap
+    already reduced).
     """
     n = cur.shape[1]
     even = (rows_abs % 2) == 0
@@ -190,7 +210,9 @@ def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
         # source cur row r + 1 - dy; parity above was that of the source row.
         streamed.append(moved[1 - dy:n - 1 - dy])
     streamed.append(cur[rules.REST_BIT, 1:n - 1])    # rest particles stay
-    streamed.append(cur[rules.SOLID_BIT, 1:n - 1])   # geometry is static
+    # geometry is static: from the stack, or the read-only solid operand
+    streamed.append(solid if solid is not None
+                    else cur[rules.SOLID_BIT, 1:n - 1])
 
     # --- collide (paper's LUT scattering, as boolean algebra) ---------------
     tt = jnp.asarray(t, _U32)
@@ -209,12 +231,14 @@ def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
         else:
             acc = acc_pre
         planes = boolean.force_planes(planes, acc)
-    return jnp.stack(planes)
+    # static mode: the solid plane stays in its operand, not the stack
+    return jnp.stack(planes[:7] if solid is not None else planes)
 
 
 def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
                h: int, bh: int, pq: int, steps: int, rng_in_kernel: bool,
-               variant: str = "fhp2", extended: bool = False):
+               variant: str = "fhp2", extended: bool = False,
+               static_solid: bool = False):
     """``steps`` fused FHP updates for a band of ``bh`` rows.
 
     Refs (inputs first, output last, per pallas_call convention): the
@@ -222,10 +246,11 @@ def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
     coordinates of local element (0,0) + global lattice extents in rows /
     words -- traced, so the kernel composes with shard_map where the
     offsets are axis-index dependent), the three overlapping row-band
-    views of the plane stack, then -- when ``rng_in_kernel`` is False
-    (T=1 only) -- the precomputed chirality / force planes for the band,
-    and finally the output band.  Grid is ``(B, H/bh)``: axis 0 is the
-    ensemble lane, axis 1 the row band.
+    views of the plane stack, then -- with ``static_solid`` -- the three
+    overlapping band views of the read-only solid plane, then -- when
+    ``rng_in_kernel`` is False (T=1 only) -- the precomputed chirality /
+    force planes for the band, and finally the output band.  Grid is
+    ``(B, H/bh)``: axis 0 is the ensemble lane, axis 1 the row band.
 
     ``extended`` selects the non-wrapping shard mode: RNG / parity rows
     reduce the *global* row ``(y0 + local) mod hg`` and words reduce
@@ -233,9 +258,17 @@ def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
     global periodic wrap, e.g. shard 0's top halo) reproduce the owning
     shard's stream; the periodic-mode local reduction ``y0 + local mod h``
     cannot express that.
+
+    ``static_solid`` selects the 7-dynamic-plane layout (module
+    docstring): the plane refs carry [moving x6, rest]; the solid band is
+    assembled from its own three views once and sliced per unrolled step.
     """
     out_ref = rest[-1]
-    extra_refs = rest[:-1]
+    if static_solid:
+        sol_up, sol_mid, sol_down = rest[0], rest[1], rest[2]
+        extra_refs = rest[3:-1]
+    else:
+        extra_refs = rest[:-1]
     i = pl.program_id(1)
     t0 = s_ref[0, 0]
     y0 = s_ref[0, 1]
@@ -259,6 +292,11 @@ def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
     cur = jnp.concatenate(
         [up_ref[0, :, bh - T:bh, :], mid_ref[0], down_ref[0, :, 0:T, :]],
         axis=1)
+    if static_solid:
+        # Solid rows matching cur's initial bh + 2T extent; step s works
+        # on band rows [s, n0 - s), so its interior is band[s+1:n0-s-1].
+        solid_band = jnp.concatenate(
+            [sol_up[bh - T:bh, :], sol_mid[...], sol_down[0:T, :]], axis=0)
 
     for s in range(T):
         n = cur.shape[1]                      # bh + 2 * (T - s)
@@ -273,13 +311,15 @@ def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
             rows_abs = (y0 + i * bh - (T - s) + row_iota) % s_ref[0, 3]
         else:
             rows_abs = y0 + (i * bh - (T - s) + row_iota) % h
+        sol = solid_band[s + 1:s + n - 1] if static_solid else None
         if rng_in_kernel:
             cur = _fused_step(cur, rows_abs, cols_abs, t0 + s, pq,
-                              True, variant)
+                              True, variant, solid=sol)
         else:
             cur = _fused_step(cur, rows_abs, cols_abs, t0 + s, pq, False,
                               variant, chi_pre=extra_refs[0][...],
-                              acc_pre=extra_refs[-1][...] if pq > 0 else None)
+                              acc_pre=extra_refs[-1][...] if pq > 0 else None,
+                              solid=sol)
 
     out_ref[0] = cur
 
@@ -287,8 +327,11 @@ def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
 def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
                   rng_in_kernel: bool, interpret: bool,
                   variant: str = "fhp2", steps: int = 1, batch: int = 1,
-                  extended: bool = False, donate: bool = False):
-    """Build the pallas_call for a (B, 8, h, wd) plane stack.
+                  extended: bool = False, donate: bool = False,
+                  static_solid: bool = False):
+    """Build the pallas_call for a (B, 8, h, wd) plane stack -- or, with
+    ``static_solid``, a (B, 7, h, wd) dynamic stack plus a read-only
+    (h, wd) solid plane operand (module docstring).
 
     ``extended`` builds the non-wrapping shard-mode kernel (clamped band
     maps + global-coordinate RNG; see module docstring).  ``donate``
@@ -306,9 +349,12 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
     assert not donate or (extended and bh == h), \
         "input_output_aliases needs extended mode and a single row band " \
         "(multi-band in-place update is a read-after-write hazard)"
+    assert rng_in_kernel or not static_solid, \
+        "static_solid is a fused-path feature: rng_in_kernel=True"
     nb = h // bh
+    np_ = 7 if static_solid else 8
 
-    band = lambda f: pl.BlockSpec((1, 8, bh, wd), f)
+    band = lambda f: pl.BlockSpec((1, np_, bh, wd), f)
     if extended:
         up = band(lambda b, i: (b, 0, jnp.maximum(i - 1, 0), 0))
         down = band(lambda b, i: (b, 0, jnp.minimum(i + 1, nb - 1), 0))
@@ -321,6 +367,18 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
         band(lambda b, i: (b, 0, i, 0)),              # own band
         down,                                         # lower halo band
     ]
+    if static_solid:
+        # The solid plane's own three overlapping band views; shared by
+        # every ensemble lane (the index map ignores b).
+        sband = lambda f: pl.BlockSpec((bh, wd), f)
+        if extended:
+            in_specs += [sband(lambda b, i: (jnp.maximum(i - 1, 0), 0)),
+                         sband(lambda b, i: (i, 0)),
+                         sband(lambda b, i: (jnp.minimum(i + 1, nb - 1), 0))]
+        else:
+            in_specs += [sband(lambda b, i: ((i + nb - 1) % nb, 0)),
+                         sband(lambda b, i: (i, 0)),
+                         sband(lambda b, i: ((i + 1) % nb, 0))]
     if not rng_in_kernel:
         in_specs.append(pl.BlockSpec((bh, wd), lambda b, i: (i, 0)))   # chi
         if pq > 0:
@@ -329,13 +387,13 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
 
     kern = functools.partial(fhp_kernel, h=h, bh=bh, pq=pq, steps=steps,
                              rng_in_kernel=rng_in_kernel, variant=variant,
-                             extended=extended)
+                             extended=extended, static_solid=static_solid)
     return pl.pallas_call(
         kern,
         grid=(batch, nb),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 8, bh, wd), lambda b, i: (b, 0, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((batch, 8, h, wd), jnp.uint32),
+        out_specs=pl.BlockSpec((1, np_, bh, wd), lambda b, i: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, np_, h, wd), jnp.uint32),
         input_output_aliases={1: 0} if donate else {},
         interpret=interpret,
     )

@@ -100,26 +100,39 @@ def hbm_bytes_per_site(bh: int, steps: int) -> float:
 
 
 def sharded_hbm_bytes_per_site(bh: int, steps: int, depth: int,
-                               hl: int, wdl: int) -> float:
+                               hl: int, wdl: int,
+                               static_solid: bool = False) -> float:
     """Modeled HBM traffic per useful site update of the sharded
     extended-shard path (``roofline.analysis.sharded_fhp_traffic``)."""
     return _roofline.sharded_fhp_traffic(
-        hl, wdl, depth=depth, T=steps,
-        block_rows=bh)["hbm_bytes_per_site_step"]
+        hl, wdl, depth=depth, T=steps, block_rows=bh,
+        static_solid=static_solid)["hbm_bytes_per_site_step"]
 
 
 def sharded_launch_cost(bh: int, steps: int, depth: int,
-                        hl: int, wdl: int) -> float:
+                        hl: int, wdl: int, *,
+                        static_solid: bool = False,
+                        exchange_latency_s: float | None = None) -> float:
     """Modeled seconds per useful site update for the sharded path: HBM +
-    weighted apron compute + exchange bandwidth + exchange latency."""
+    weighted apron compute + exchange bandwidth + exchange latency.
+
+    ``exchange_latency_s=None`` uses the measured ppermute round-trip
+    latency when a real multi-chip mesh is attached, else the 3 us
+    constant (``roofline.analysis.measured_exchange_latency``)."""
+    if exchange_latency_s is None:
+        exchange_latency_s = _roofline.measured_exchange_latency()
     return _roofline.sharded_fhp_traffic(
         hl, wdl, depth=depth, T=steps, block_rows=bh,
-        compute_row_weight=COMPUTE_ROW_WEIGHT)["total_s_per_site"]
+        compute_row_weight=COMPUTE_ROW_WEIGHT,
+        exchange_latency_s=exchange_latency_s,
+        static_solid=static_solid)["total_s_per_site"]
 
 
 def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
                     vmem_budget: int = VMEM_BUDGET_BYTES,
-                    max_depth: int | None = None):
+                    max_depth: int | None = None,
+                    static_solid: bool = False,
+                    exchange_latency_s: float | None = None):
     """Choose the launch configuration minimizing modeled cost under the
     VMEM budget.
 
@@ -135,6 +148,11 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
     amortised exchange cost.  The extended path has no divisibility
     constraint (rows are padded), but the T-row halo must fit the block
     and the depth must fit the one-word x halo (depth <= 31).
+
+    ``static_solid`` prices the 7-dynamic-plane schedule (cached solid
+    apron, sharded search only); ``exchange_latency_s=None`` resolves to
+    the measured ppermute latency (constant fallback off-mesh) -- only
+    for the sharded search, whose cost model is the only consumer.
     """
     best = None
     best_cost = None
@@ -153,6 +171,8 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
             raise ValueError(f"no valid launch config for H={h}, Wd={wd}")
         return best
 
+    if exchange_latency_s is None:
+        exchange_latency_s = _roofline.measured_exchange_latency()
     hl, wdl = h, wd
     bh = 32
     while bh >= 1:
@@ -162,7 +182,9 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
             for steps in range(1, min(bh, max_steps, depth) + 1):
                 if vmem_bytes(bh, wdl + 2, steps) > vmem_budget:
                     break
-                cost = sharded_launch_cost(bh, steps, depth, hl, wdl)
+                cost = sharded_launch_cost(
+                    bh, steps, depth, hl, wdl, static_solid=static_solid,
+                    exchange_latency_s=exchange_latency_s)
                 if best_cost is None or cost < best_cost:
                     best, best_cost = (bh, steps, depth), cost
         bh //= 2
@@ -183,7 +205,8 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
                     steps_per_launch: int = 1,
                     extended: bool = False,
                     hg: int | None = None, wdg: int | None = None,
-                    donate: bool = False) -> jnp.ndarray:
+                    donate: bool = False,
+                    solid: jnp.ndarray | None = None) -> jnp.ndarray:
     """``steps_per_launch`` fused stream+collide(+force) FHP steps in one
     kernel launch, on ``(8, H, Wd)`` or batched ``(B, 8, H, Wd)`` uint32
     planes (ensemble lanes; all lanes share the RNG stream).
@@ -199,15 +222,29 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
     draw the owning shard's stream bit-exactly.  Each extended launch
     shrinks the valid region by ``steps_per_launch`` rows per side and
     one lattice column per step.  ``donate`` aliases the plane input to
-    the output (extended mode only)."""
+    the output (extended mode only).
+
+    ``solid`` switches on static-geometry mode: ``planes`` then carries
+    the 7 *dynamic* planes only and the (H, Wd) solid plane rides as a
+    read-only operand shared by all lanes -- the kernel writes 7 planes
+    per launch instead of 8 (see ``kernel.py``)."""
     squeeze = planes.ndim == 3
     if squeeze:
         planes = planes[None]
-    b, _, h, wd = planes.shape
+    b, np_, h, wd = planes.shape
+    static_solid = solid is not None
+    if planes.shape[-3] != (7 if static_solid else 8):
+        raise ValueError(f"plane stack has {np_} planes; expected "
+                         f"{'7 dynamic (solid passed separately)' if static_solid else '8'}")
+    if static_solid and solid.shape != (h, wd):
+        raise ValueError(f"solid plane {solid.shape} != lattice {(h, wd)}")
     T = steps_per_launch
     if T != 1 and not rng_in_kernel:
         raise ValueError("steps_per_launch > 1 requires rng_in_kernel=True "
                          "(precomputed RNG planes cover a single step)")
+    if static_solid and not rng_in_kernel:
+        raise ValueError("static-solid mode is a fused-path feature "
+                         "(rng_in_kernel=True)")
     if extended:
         if not rng_in_kernel:
             raise ValueError("extended mode draws global-coordinate RNG "
@@ -228,7 +265,8 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
     step = _k.make_fhp_step(h, wd, bh=bh, pq=pq,
                             rng_in_kernel=rng_in_kernel, interpret=interpret,
                             variant=variant, steps=T, batch=b,
-                            extended=extended, donate=donate)
+                            extended=extended, donate=donate,
+                            static_solid=static_solid)
     scalars = jnp.stack([jnp.asarray(t, jnp.int32),
                          jnp.asarray(y0, jnp.int32),
                          jnp.asarray(xw0, jnp.int32),
@@ -236,6 +274,8 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
                          jnp.asarray(wd if wdg is None else wdg,
                                      jnp.int32)]).reshape(1, 5)
     args = [scalars, planes, planes, planes]
+    if static_solid:
+        args += [solid, solid, solid]
     if not rng_in_kernel:
         args.append(prng.chirality_words((h, wd), t, y0=y0, xw0=xw0))
         if pq > 0:
@@ -270,7 +310,8 @@ def run_pallas(planes: jnp.ndarray, steps: int, *, p_force: float = 0.0,
 def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
                  y0=0, xw0=0, hg: int, wdg: int,
                  steps_per_launch: int | None = None,
-                 block_rows: int = 0, **kw) -> jnp.ndarray:
+                 block_rows: int = 0,
+                 solid_ext: jnp.ndarray | None = None, **kw) -> jnp.ndarray:
     """Advance a halo-extended shard array ``steps`` steps in
     ceil(steps / T) extended-mode launches (carry aliased in place when
     the launch is single-band; see ``kernel.make_fhp_step``).
@@ -283,7 +324,14 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
     ``[steps, He - steps)`` and words ``[1, Wde - 1)`` of the result hold
     the stepped shard (validity shrinks ``steps`` rows per side and one
     lattice column per step; the usual call has ``He = hl + 2*steps``
-    so exactly the owned block survives)."""
+    so exactly the owned block survives).
+
+    ``solid_ext`` is the static-geometry cache: the (He, Wde) pre-extended
+    solid plane of this shard's tile.  ``ext`` then carries only the 7
+    dynamic planes, each launch takes the solid as a read-only operand,
+    and -- because the cached apron holds the *true* global solid, not a
+    validity-shrinking copy -- the same cache serves every launch and
+    every exchange round of the geometry's lifetime."""
     steps = int(steps)
     T = int(steps_per_launch or min(steps, MAX_STEPS_PER_LAUNCH))
     he, wde = ext.shape[-2], ext.shape[-1]
@@ -296,6 +344,10 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
     if pad:
         widths = [(0, 0)] * (ext.ndim - 2) + [(0, pad), (0, 0)]
         ext = jnp.pad(ext, widths)
+    if solid_ext is not None:
+        assert solid_ext.shape == (he, wde), (solid_ext.shape, he, wde)
+        if pad:
+            solid_ext = jnp.pad(solid_ext, [(0, pad), (0, 0)])
     # In-place carry (input_output_aliases) is only race-free when one
     # band covers the lane: see kernel.make_fhp_step.
     donate = bh == ext.shape[-2]
@@ -304,10 +356,10 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
         ext = fhp_step_pallas(ext, t0 + j * T, p_force=p_force, y0=y0,
                               xw0=xw0, steps_per_launch=T, block_rows=bh,
                               extended=True, hg=hg, wdg=wdg, donate=donate,
-                              **kw)
+                              solid=solid_ext, **kw)
     if rem:
         ext = fhp_step_pallas(ext, t0 + full * T, p_force=p_force, y0=y0,
                               xw0=xw0, steps_per_launch=rem, block_rows=bh,
                               extended=True, hg=hg, wdg=wdg, donate=donate,
-                              **kw)
+                              solid=solid_ext, **kw)
     return ext[..., :he, :]

@@ -255,8 +255,64 @@ def hbm_bytes_estimate(hlo_text: str, mode: str = "fused") -> float:
 # ---------------------------------------------------------------------------
 
 PLANE_BYTES = 8 * 4            # 8 uint32 bit-planes per word of 32 nodes
+DYN_PLANE_BYTES = 7 * 4        # the 7 dynamic planes (static-solid mode)
 WORD_NODES = 32
-EXCHANGE_LATENCY_S = 3e-6      # fixed cost per halo-exchange round
+EXCHANGE_LATENCY_S = 3e-6      # fallback cost per halo-exchange round
+
+# Measured ppermute round-trip latency, filled lazily by
+# ``measured_exchange_latency`` (ROADMAP item: autotune the constant).
+_MEASURED_EXCHANGE_LATENCY: Optional[float] = None
+
+
+def measured_exchange_latency(refresh: bool = False) -> float:
+    """Per-exchange latency for the traffic model, measured when possible.
+
+    On a real multi-chip mesh (>= 2 non-CPU devices) this times a ring
+    ``ppermute`` of one tiny buffer over a 1-D mesh -- jitted, warmed,
+    best of 3 trials of 64 rounds -- and caches the per-round seconds.
+    On CPU / single-device backends ``ppermute`` is a host memcpy whose
+    timing says nothing about ICI, so the ``EXCHANGE_LATENCY_S`` constant
+    is returned unchanged (keeps the model, the autotuner, and every test
+    deterministic off-mesh)."""
+    global _MEASURED_EXCHANGE_LATENCY
+    if _MEASURED_EXCHANGE_LATENCY is not None and not refresh:
+        return _MEASURED_EXCHANGE_LATENCY
+    lat = EXCHANGE_LATENCY_S
+    try:
+        import jax
+        devs = jax.devices()
+        if jax.default_backend() != "cpu" and len(devs) >= 2:
+            import jax.numpy as jnp
+            from jax import lax
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.core.distributed import _ring, _shard_map
+
+            n, rounds = len(devs), 64
+            mesh = jax.make_mesh((n,), ("x",))
+
+            def chain(x):
+                def body(_, v):
+                    return lax.ppermute(v, "x", _ring(n, up=True))
+                return lax.fori_loop(0, rounds, body, x)
+
+            g = jax.jit(_shard_map(chain, mesh, (P("x"),), P("x")))
+            x = jax.device_put(jnp.zeros((8 * n, 128), jnp.float32),
+                               NamedSharding(mesh, P("x")))
+            g(x).block_until_ready()           # compile + warm
+            best = min(_timed(g, x) for _ in range(3))
+            lat = max(best / rounds, 1e-8)
+    except Exception:          # no mesh / no backend: keep the constant
+        lat = EXCHANGE_LATENCY_S
+    _MEASURED_EXCHANGE_LATENCY = lat
+    return lat
+
+
+def _timed(g, x) -> float:
+    import time
+    t0 = time.perf_counter()
+    g(x).block_until_ready()
+    return time.perf_counter() - t0
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -266,13 +322,21 @@ def _ceil_to(x: int, m: int) -> int:
 def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
                         block_rows: int, compute_row_weight: float = 0.2,
                         exchange_latency_s: float = EXCHANGE_LATENCY_S,
-                        hw: HW = V5E) -> Dict[str, float]:
+                        hw: HW = V5E,
+                        static_solid: bool = False) -> Dict[str, float]:
     """Modeled per-site-step costs of the sharded Pallas hot path.
 
     Returns a dict with ``hbm_bytes_per_site_step`` (the headline number:
     acceptance target <= 0.6 at depth >= 4), ``ici_bytes_per_site_step``,
     ``exchanges_per_step``, ``launches_per_step``, and the roofline-style
     time decomposition ``{hbm,compute,ici,latency,total}_s_per_site``.
+
+    ``static_solid`` prices the static-geometry cache: the solid plane is
+    exchanged once per geometry (its one-time cost is reported as
+    ``geometry_exchange_bytes``, excluded from the per-step totals) and
+    every round moves the 7 *dynamic* planes over ICI -- a 7/8 cut of the
+    plane term -- while each launch writes 7 planes back to HBM instead
+    of 8 (reads stay at 8: the kernel still consumes the solid band).
     """
     assert 1 <= T <= block_rows and 1 <= depth, (T, block_rows, depth)
     he = hl + 2 * depth
@@ -281,10 +345,14 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
     # Launch schedule: full T-step launches plus one rem-step tail launch.
     ts = [T] * (depth // T) + ([depth % T] if depth % T else [])
     sites = float(hl * wdl * WORD_NODES)       # useful sites per shard step
+    write_pb = DYN_PLANE_BYTES if static_solid else PLANE_BYTES
+    xchg_pb = DYN_PLANE_BYTES if static_solid else PLANE_BYTES
 
-    # HBM: per launch, every band reads bh + 2*Tj rows and writes bh rows.
-    hbm_rows = sum(nb * (block_rows + 2 * tj) + he_p for tj in ts)
-    hbm_b = PLANE_BYTES * (wdl + 2) * hbm_rows / (sites * depth)
+    # HBM: per launch, every band reads bh + 2*Tj rows (all 8 planes --
+    # the solid band rides in either layout) and writes bh rows (7 or 8).
+    hbm_b = ((wdl + 2) * sum(PLANE_BYTES * nb * (block_rows + 2 * tj)
+                             + write_pb * he_p for tj in ts)
+             / (sites * depth))
 
     # Redundant compute: step s of a Tj-launch updates bh + 2*(Tj - s - 1)
     # rows per band; useful work is hl rows per global step.
@@ -294,8 +362,10 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
               / (sites * depth))
 
     # ICI: per exchange each shard sends depth rows up + depth rows down of
-    # the x-extended width, plus one word column each side for the x halo.
-    ici_exchange_b = PLANE_BYTES * (2 * depth * (wdl + 2) + 2 * hl)
+    # the x-extended width, plus one word column each side for the x halo;
+    # static geometry drops the solid plane from every round.
+    halo_words = 2 * depth * (wdl + 2) + 2 * hl
+    ici_exchange_b = xchg_pb * halo_words
     ici_b = ici_exchange_b / (sites * depth)
 
     lat_s = exchange_latency_s / (sites * depth)
@@ -307,6 +377,10 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
         "compute_row_equiv_bytes_per_site_step": comp_b,
         "ici_bytes_per_site_step": ici_b,
         "ici_bytes_per_exchange": float(ici_exchange_b),
+        # one-time solid-apron exchange (amortises to ~0 over a run)
+        "geometry_exchange_bytes": float(4 * halo_words) if static_solid
+                                   else 0.0,
+        "static_solid": float(static_solid),
         "exchanges_per_step": 1.0 / depth,
         "launches_per_step": len(ts) / depth,
         "hbm_s_per_site": hbm_s,

@@ -1,0 +1,8 @@
+"""Named FHP scenarios: geometry + density + forcing + seed +
+observables, one registry for examples, benchmarks, and CI sweeps."""
+from repro.scenarios import observables  # noqa: F401  (re-export module)
+from repro.scenarios.base import Scenario
+from repro.scenarios.registry import get, names, register
+import repro.scenarios.library  # noqa: E402,F401  (populates the registry)
+
+__all__ = ["Scenario", "get", "names", "register", "observables"]

@@ -1,0 +1,75 @@
+"""Scenario: a named, reproducible FHP workload -- geometry + fill
+density + forcing + seed -- with its initial state builders.
+
+A Scenario bundles everything a benchmark, test, or example needs to run
+one of the paper's "arbitrary 2-D geometries" through any stepping path
+(byte oracle, jnp bit-plane, fused Pallas, sharded extended): the
+geometry rasterizes in global coordinates (shard-exact, see
+``repro.geometry``), the fluid fill is seeded, and observables live in
+``scenarios.observables``.  Register builders with
+``scenarios.register``; fetch with ``scenarios.get(name, height=...,
+width=...)`` -- every scenario scales to any (even H, W % 32 == 0)
+lattice so CI smoke sweeps and production runs share one definition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import rules
+from repro.geometry import Geometry, raster
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named workload on an ``height x width`` lattice.
+
+    ``obstacles`` names sub-geometries whose momentum transfer (drag) is
+    tracked separately by ``observables.solid_momentum``; they are
+    usually also part of ``geometry``."""
+    name: str
+    height: int
+    width: int
+    geometry: Geometry
+    density: float = 0.2
+    p_force: float = 0.0
+    seed: int = 0
+    variant: str = "fhp2"
+    description: str = ""
+    obstacles: Tuple[Tuple[str, Geometry], ...] = ()
+
+    def __post_init__(self):
+        assert self.height % 2 == 0, \
+            f"H={self.height} must be even (global row-parity contract)"
+        assert self.width % 32 == 0, \
+            f"W={self.width} must pack into 32-node words"
+
+    def solid_mask(self) -> np.ndarray:
+        """Global (H, W) boolean solid mask."""
+        return raster.rasterize(self.geometry, (self.height, self.width))
+
+    def solid_plane(self) -> np.ndarray:
+        """Global packed (H, W//32) uint32 solid plane."""
+        return raster.pack_mask(self.solid_mask())
+
+    def initial_bytes(self) -> np.ndarray:
+        """(H, W) uint8 byte-per-node state: seeded random fluid at
+        ``density`` per moving bit, geometry nodes solid (and empty --
+        the no-slip mechanism populates their perimeter dynamically)."""
+        rng = np.random.default_rng(self.seed)
+        occ = (rng.random((7, self.height, self.width))
+               < self.density).astype(np.uint8)
+        state = np.zeros((self.height, self.width), dtype=np.uint8)
+        for i in range(7):
+            state |= occ[i] << i
+        return np.where(self.solid_mask(), np.uint8(rules.SOLID_MASK),
+                        state)
+
+    def initial_planes(self):
+        """Packed (8, H, W//32) uint32 bit-plane stack (jnp array)."""
+        import jax.numpy as jnp
+
+        from repro.core import bitplane
+        return bitplane.pack(jnp.asarray(self.initial_bytes()))

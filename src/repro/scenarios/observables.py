@@ -1,0 +1,95 @@
+"""Observables on packed bit-plane states: coarse-grained velocity,
+per-obstacle momentum transfer (drag), and the mass audit.
+
+Everything works by popcount reductions directly on the packed words --
+no unpacking -- and accepts leading ensemble-lane axes like the steppers.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplane, rules
+
+WORD = 32
+
+
+def mass(planes: jnp.ndarray) -> jnp.ndarray:
+    """Total particle count (moving + rest); the conserved quantity."""
+    return bitplane.density_total(planes)
+
+
+def mass_audit(planes: jnp.ndarray, expected) -> bool:
+    """True iff the particle count matches ``expected`` in every lane."""
+    return bool((mass(planes) == jnp.asarray(expected)).all())
+
+
+def solid_momentum(planes: jnp.ndarray, solid_words) -> Tuple[jnp.ndarray,
+                                                              jnp.ndarray]:
+    """(sum px2, sum py) of moving particles sitting on ``solid_words``
+    nodes -- the particles mid-bounce against an obstacle.
+
+    Bounce-back reverses exactly this momentum next step, so the
+    per-step momentum transfer to the obstacle (drag force in lattice
+    units) is twice this quantity.  ``solid_words`` is any packed mask
+    (e.g. one obstacle's own rasterization) -- it need not be the full
+    geometry."""
+    m = jnp.asarray(solid_words, jnp.uint32)
+    px2 = jnp.zeros(planes.shape[:-3], jnp.int32)
+    py = jnp.zeros(planes.shape[:-3], jnp.int32)
+    for i in range(rules.N_DIR):
+        c = jax.lax.population_count(planes[..., i, :, :] & m).sum(
+            axis=(-2, -1), dtype=jnp.int32)
+        px2 = px2 + c * int(rules.CX2[i])
+        py = py + c * int(rules.CY[i])
+    return px2, py
+
+
+def coarse_velocity(planes: jnp.ndarray, tile_rows: int = 8,
+                    tile_words: int = 2) -> jnp.ndarray:
+    """Block-averaged velocity field: (..., H/tr, Wd/tw, 2) float32.
+
+    Component 0 is mean x-velocity (lattice units per step), component 1
+    mean y-velocity in units of sqrt(3)/2 lattice constants per step.
+    Tiles are ``tile_rows`` rows x ``tile_words`` packed words (x
+    resolution is a multiple of 32 nodes by construction -- popcounts
+    never unpack).  Empty tiles (all-solid) report zero velocity."""
+    h, wd = planes.shape[-2:]
+    assert h % tile_rows == 0 and wd % tile_words == 0, \
+        (h, wd, tile_rows, tile_words)
+    px2 = jnp.zeros(planes.shape[:-3] + (h, wd), jnp.int32)
+    py = jnp.zeros(planes.shape[:-3] + (h, wd), jnp.int32)
+    n = jnp.zeros(planes.shape[:-3] + (h, wd), jnp.int32)
+    for i in range(rules.N_DIR):
+        c = jax.lax.population_count(planes[..., i, :, :]).astype(jnp.int32)
+        px2 = px2 + c * int(rules.CX2[i])
+        py = py + c * int(rules.CY[i])
+        n = n + c
+    n = n + jax.lax.population_count(
+        planes[..., rules.REST_BIT, :, :]).astype(jnp.int32)
+
+    def tiles(a):
+        shape = a.shape[:-2] + (h // tile_rows, tile_rows,
+                                wd // tile_words, tile_words)
+        return a.reshape(shape).sum(axis=(-3, -1)).astype(jnp.float32)
+
+    tn = jnp.maximum(tiles(n), 1.0)
+    ux = tiles(px2) / 2.0 / tn
+    uy = tiles(py) / tn
+    return jnp.stack([ux, uy], axis=-1)
+
+
+def obstacle_report(planes: jnp.ndarray, scenario) -> dict:
+    """Per-obstacle momentum transfer for a Scenario's named obstacles:
+    {name: (px2, py)} as plain ints (single-lane states)."""
+    from repro.geometry import raster
+    out = {}
+    for name, geom in scenario.obstacles:
+        words = raster.solid_words(
+            geom, (scenario.height, scenario.width // WORD))
+        px2, py = solid_momentum(planes, jnp.asarray(words))
+        out[name] = (int(px2), int(py))
+    return out

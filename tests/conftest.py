@@ -14,7 +14,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 _TIER1_MODULES = {
     "test_rules", "test_prng", "test_roofline", "test_propagation",
     "test_substrate", "test_fhp3", "test_equivalence", "test_kernels",
-    "test_temporal", "test_sharded_pallas",
+    "test_temporal", "test_sharded_pallas", "test_geometry",
+    "test_scenarios",
 }
 
 

@@ -113,6 +113,53 @@ def test_extended_mode_batched_lanes():
 # Joint autotune: the sharded (block_rows, T, depth) point and its model.
 # ---------------------------------------------------------------------------
 
+def test_traffic_model_static_solid():
+    """Static geometry cuts exchange bytes by exactly 7/8 (the solid
+    plane leaves every round) and the HBM writeback term by 7/8, while
+    reads are unchanged; the one-time solid-apron exchange is priced
+    separately and excluded from per-step totals."""
+    from repro.roofline.analysis import sharded_fhp_traffic
+    for depth, T in [(1, 1), (4, 2), (8, 8)]:
+        dyn = sharded_fhp_traffic(256, 32, depth=depth, T=T, block_rows=32)
+        sta = sharded_fhp_traffic(256, 32, depth=depth, T=T, block_rows=32,
+                                  static_solid=True)
+        assert sta["ici_bytes_per_site_step"] == pytest.approx(
+            dyn["ici_bytes_per_site_step"] * 7 / 8)
+        assert sta["ici_bytes_per_exchange"] == pytest.approx(
+            dyn["ici_bytes_per_exchange"] * 7 / 8)
+        assert sta["hbm_bytes_per_site_step"] < dyn["hbm_bytes_per_site_step"]
+        assert sta["geometry_exchange_bytes"] == pytest.approx(
+            dyn["ici_bytes_per_exchange"] / 8)
+        assert dyn["geometry_exchange_bytes"] == 0.0
+        # latency/exchange-count structure is untouched by the cache
+        assert sta["exchanges_per_step"] == dyn["exchanges_per_step"]
+        assert sta["launches_per_step"] == dyn["launches_per_step"]
+
+
+def test_measured_exchange_latency_constant_off_mesh():
+    """On CPU / single-device backends the ppermute microbenchmark would
+    time a host memcpy, so the tuner must fall back to the documented
+    constant (and cache the answer); autotune accepts an explicit
+    override and gives the same point for the same latency."""
+    from repro.roofline import analysis
+    lat = analysis.measured_exchange_latency()
+    assert lat == analysis.measured_exchange_latency()  # cached
+    import jax
+    if jax.default_backend() == "cpu" or len(jax.devices()) < 2:
+        assert lat == analysis.EXCHANGE_LATENCY_S
+    else:
+        assert 0 < lat < 1e-2
+    assert (autotune_launch(1024, 128, max_depth=16)
+            == autotune_launch(1024, 128, max_depth=16,
+                               exchange_latency_s=lat))
+    # a much larger latency must push the tuner at least as deep
+    _, _, d0 = autotune_launch(1024, 128, max_depth=16,
+                               exchange_latency_s=lat)
+    _, _, d1 = autotune_launch(1024, 128, max_depth=16,
+                               exchange_latency_s=100 * lat)
+    assert d1 >= d0
+
+
 def test_autotune_joint_sharded():
     for hl, wdl in [(256, 32), (1024, 128), (8192, 2048)]:
         bh, T, d = autotune_launch(hl, wdl, max_depth=16)
