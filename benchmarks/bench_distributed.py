@@ -96,11 +96,13 @@ def _model_records(smoke: bool) -> List[Dict]:
     shards = [(256, 32)] if smoke else [(256, 32), (1024, 128), (8192, 2048)]
     out = []
     for hl, wdl in shards:
-        bh, T, depth = autotune_launch(hl, wdl, max_depth=16)
-        m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T, block_rows=bh)
+        bh, bw, T, depth = autotune_launch(hl, wdl, max_depth=16)
+        m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T, block_rows=bh,
+                                block_words=bw)
         out.append({
             "bench": "distributed", "impl": "pallas-sharded",
             "backend": None, "shard": [hl, wdl], "block_rows": bh,
+            "block_words": bw,
             "T": T, "depth": depth, "B": 1, "sites_per_sec": None,
             "lattice": None, "smoke": smoke, "structural": True,
             "autotuned": True,
@@ -118,7 +120,7 @@ def main(smoke: bool | None = None) -> List[Dict]:
     records = _model_records(smoke)
     for r in records:
         print(f"autotune(shard={r['shard']}),(bh={r['block_rows']} "
-              f"T={r['T']} d={r['depth']}),config")
+              f"bw={r['block_words']} T={r['T']} d={r['depth']}),config")
         print(f"model_hbm_bytes_per_site(shard={r['shard']}),"
               f"{r['model_hbm_bytes_per_site']:.4f},B")
     env = dict(os.environ)

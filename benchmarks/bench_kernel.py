@@ -72,26 +72,27 @@ def main(smoke: bool | None = None) -> List[Dict]:
 
     for wd in (128, 512, 2048, wd_full):
         bh = pick_block_rows(h, wd)
-        bh_t, t_launch = autotune_launch(h, wd)
+        bh_t, bw_t, t_launch = autotune_launch(h, wd)
         print(f"block_rows(wd={wd}),{bh},rows")
         print(f"vmem_bytes(wd={wd}),{vmem_bytes(bh, wd)},B")
-        print(f"autotune(wd={wd}),(bh={bh_t} T={t_launch}),config")
+        print(f"autotune(wd={wd}),(bh={bh_t} bw={bw_t} T={t_launch}),config")
         # Structural record for a hypothetical per-device row width wd --
         # no lattice/wall-clock fields, they would contradict wd.
         records.append({"bench": "kernel", "impl": "pallas-fused",
                         "backend": backend, "wd": wd, "block_rows": bh_t,
+                        "block_words": bw_t,
                         "T": t_launch, "B": 1, "sites_per_sec": None,
-                        "vmem_bytes": vmem_bytes(bh_t, wd, t_launch),
+                        "vmem_bytes": vmem_bytes(bh_t, wd, t_launch, bw_t),
                         "model_hbm_bytes_per_site":
-                            hbm_bytes_per_site(bh_t, t_launch),
+                            hbm_bytes_per_site(bh_t, t_launch, bw_t, wd),
                         "lattice": None, "smoke": smoke,
                         "structural": True})
     # HBM traffic of the fused kernel: one read + one write of 8 planes
     print(f"hbm_bytes_per_site,{2 * 8 * 4 / 32.0},B")
     print(f"hbm_bytes_per_site_unfused,{2 * 2 * 8 * 4 / 32.0},B")
-    bh_t, t_launch = autotune_launch(h, wd_full)
+    bh_t, bw_t, t_launch = autotune_launch(h, wd_full)
     print(f"hbm_bytes_per_site_temporal,"
-          f"{hbm_bytes_per_site(bh_t, t_launch):.4f},B")
+          f"{hbm_bytes_per_site(bh_t, t_launch, bw_t, wd_full):.4f},B")
     return records
 
 

@@ -111,16 +111,18 @@ def _model_records(smoke: bool) -> List[Dict]:
     shards = [(256, 32)] if smoke else [(256, 32), (1024, 128)]
     out = []
     for hl, wdl in shards:
-        bh, T, depth = autotune_launch(hl, wdl, max_depth=16,
-                                       static_solid=True)
+        bh, bw, T, depth = autotune_launch(hl, wdl, max_depth=16,
+                                           static_solid=True)
         for static in (False, True):
             m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T,
-                                    block_rows=bh, static_solid=static)
+                                    block_rows=bh, block_words=bw,
+                                    static_solid=static)
             out.append({
                 "bench": "scenarios",
                 "impl": "pallas-sharded-static" if static
                         else "pallas-sharded",
                 "backend": None, "shard": [hl, wdl], "block_rows": bh,
+                "block_words": bw,
                 "T": T, "depth": depth, "B": 1, "sites_per_sec": None,
                 "lattice": None, "smoke": smoke, "structural": True,
                 "autotuned": True, "static_solid": static,

@@ -11,9 +11,23 @@
 # The scenario smoke sweep (every registered scenario, tiny lattice,
 # sharded static-geometry path, bit-exactness + mass-conservation
 # asserts) runs inside ``benchmarks.run --smoke`` via bench_scenarios --
-# its assertions gate CI alongside the tier-1 tests.
+# its assertions gate CI alongside the tier-1 tests.  The 2-D x-block
+# gate: tier1 includes tests/test_xblock.py, bench_temporal's smoke
+# profile times the 1-D vs 2-D tile on the same lattice, and the check
+# below asserts the emitted BENCH_kernel.json carries both the headline
+# block and a timed 2-D (block_words < Wd) record.
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -m tier1 -x -q
 python -m benchmarks.run --smoke
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_kernel.json"))
+hl = d["headline"]
+assert hl["best_single_device"] and hl["best_single_device"]["sites_per_sec"]
+assert hl["best_sharded"] and hl["best_sharded"]["sites_per_sec"]
+assert any(r.get("xblock") == "2d" and r.get("sites_per_sec")
+           for r in d["records"]), "no timed 2-D x-block record"
+print("BENCH_kernel.json gate: headline + 2-D x-block record present")
+EOF

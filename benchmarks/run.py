@@ -19,9 +19,11 @@ B)`` -- so the perf trajectory is tracked across PRs.  Records with
 ``"structural": true`` carry model-only columns (no wall clock --
 ``sites_per_sec``/``lattice`` are null by design); every impl also emits
 at least one real timed record, even under ``--smoke``, so the perf
-trajectory is never empty.  ``--smoke`` runs the record-producing benches
-on tiny lattices (interpret mode on CPU) so CI gets the same JSON shape
-in seconds.
+trajectory is never empty.  A top-level ``"headline"`` block summarises
+the best *timed* single-device and sharded configs (sites/s) so the
+cross-PR trajectory is one lookup, not a records scan.  ``--smoke`` runs
+the record-producing benches on tiny lattices (interpret mode on CPU) so
+CI gets the same JSON shape in seconds.
 """
 from __future__ import annotations
 
@@ -31,6 +33,29 @@ import sys
 import time
 
 BENCH_JSON = "BENCH_kernel.json"
+
+_HEADLINE_KEYS = ("bench", "impl", "backend", "lattice", "block_rows",
+                  "block_words", "T", "B", "depth", "sites_per_sec", "smoke")
+
+
+def _headline(records):
+    """Best *timed* sites/s per tier -- the single number the cross-PR
+    perf trajectory tracks.  Single-device = the fused kernel benches
+    (kernel / temporal); sharded = the mesh benches (distributed /
+    scenarios).  Structural (model-only) rows never qualify."""
+    timed = [r for r in records
+             if not r.get("structural") and r.get("sites_per_sec")]
+
+    def best(benches):
+        rows = [r for r in timed if r.get("bench") in benches
+                and "pallas" in str(r.get("impl", ""))]
+        if not rows:
+            return None
+        top = max(rows, key=lambda r: r["sites_per_sec"])
+        return {k: top.get(k) for k in _HEADLINE_KEYS if k in top}
+
+    return {"best_single_device": best(("kernel", "temporal")),
+            "best_sharded": best(("distributed", "scenarios"))}
 
 
 def main(argv=None) -> None:
@@ -66,6 +91,7 @@ def main(argv=None) -> None:
                     "smoke_requested": smoke,
                     "smoke_profiles_present":
                         sorted({bool(r.get("smoke")) for r in records})},
+           "headline": _headline(records),
            "records": records}
     with open(BENCH_JSON, "w") as f:
         json.dump(out, f, indent=2)

@@ -128,7 +128,7 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                          depth: int = 1, use_pallas: bool = False,
                          batched: bool = False,
                          steps_per_launch: int | None = None,
-                         block_rows: int = 0,
+                         block_rows: int = 0, block_words: int = 0,
                          static_solid: bool = False):
     """Build ``step(planes, t) -> planes`` advancing ``depth`` global FHP
     steps per halo exchange under ``shard_map``.
@@ -140,7 +140,11 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
     one depth-``d`` exchange feeds ``d`` in-kernel steps --
     ``ceil(d / steps_per_launch)`` fused launches with a donated carry
     (``steps_per_launch`` defaults to ``min(depth, MAX_STEPS_PER_LAUNCH)``;
-    ``block_rows`` 0 = auto).  The sharded hot path thus compounds the
+    ``block_rows`` / ``block_words`` 0 = auto -- a non-zero
+    ``block_words`` below the extended shard width selects the 2-D
+    (x x y) blocked kernel grid, which lifts the VMEM ceiling on wide
+    shards; the autotuned tile from ``ops.autotune_launch`` passes
+    through unchanged).  The sharded hot path thus compounds the
     T-fold HBM-traffic cut of temporal blocking with the 1/d exchange
     count of halo-widening.  ``batched`` steps a (B, 8, H, Wd) ensemble
     stack (lanes replicated over the mesh, sharded in H/Wd like the
@@ -182,7 +186,8 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                                y0=iy * hl - d, xw0=ix * wdl - 1,
                                hg=ny * hl, wdg=nx * wdl,
                                steps_per_launch=steps_per_launch,
-                               block_rows=block_rows, solid_ext=solid_ext)
+                               block_rows=block_rows,
+                               block_words=block_words, solid_ext=solid_ext)
             return out[..., d:d + hl, 1:1 + wdl]
 
         if static_solid:

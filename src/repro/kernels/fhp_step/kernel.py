@@ -40,11 +40,26 @@ A/B/C), computes the update for the interior band, and writes a disjoint
 output band.  VMEM plays the role of the CUDA shared-memory apron C.
 ``steps <= bh`` keeps the T-row halo inside the neighbour bands.
 
-The x direction is kept un-blocked (full row width per program): the
-periodic x wrap is then a lane rotate inside the block, and no x halo is
-needed.  Production lattices shard W over the ``model`` mesh axis first, so
-the per-device row width is small (W_loc / 32 words); ``ops.py`` checks the
-VMEM budget and refuses shapes that would not fit on a real v5e.
+2-D (x x y) blocking (``block_words`` = bw < Wd): wide shards (e.g.
+``wdl=2048``) cannot hold a full row band plus temporaries in VMEM at deep
+T, so the grid gains a third axis over word blocks -- ``(B, H/bh, Wd/bw)``
+-- and each program owns a ``(bh, bw)`` tile.  The halo apron generalises
+symmetrically: ``_shift_x``'s cross-word bit carry means each fused step
+contaminates at most one word per side, so the tile reads a T-word apron
+per x side (nine overlapping views of the array -- the 2-D version of the
+paper's overlapping rectangles A/B/C) and each unrolled step consumes one
+apron row per y side *and* one apron word per x side.  The in-tile
+``_roll_x`` wrap is then garbage at the tile edges, but only in the
+outermost word's edge bit, and that word is dropped the same step.
+Periodic mode wraps the x index maps (mod ``Wd/bw``) so apron words are
+the true periodic neighbours; extended mode clamps them (edge tiles
+compute clamped garbage only in words the validity contract already
+drops, exactly like the row case).  The RNG word coordinates reduce the
+*global* word ``(xw0 + word) mod Wd_g`` per step, so redundant apron
+compute stays bit-exact for free.  When ``bw == Wd`` the kernel keeps the
+legacy single-view-per-row-band layout (no x apron, the rotate is the
+periodic wrap); ``ops.py`` checks the VMEM budget either way and refuses
+shapes that would not fit on a real v5e.
 
 RNG in-kernel: collision chirality and forcing bits are counter-based
 hashes of (row, word, t) -- recomputing them inside the kernel instead of
@@ -182,19 +197,24 @@ def _bernoulli_words(rows, cols, t, pq: int, salt: int) -> jnp.ndarray:
 
 def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
                 pq: int, rng_in_kernel: bool, variant: str,
-                chi_pre=None, acc_pre=None, solid=None) -> jnp.ndarray:
+                chi_pre=None, acc_pre=None, solid=None,
+                shrink_x: bool = False) -> jnp.ndarray:
     """One stream->collide(->force) update of an extended row stack.
 
-    ``cur`` is ``(8, n, wd)`` -- or ``(7, n, wd)`` dynamic planes when the
-    static ``solid`` interior rows ``(n-2, wd)`` are passed separately --
+    ``cur`` is ``(8, n, w)`` -- or ``(7, n, w)`` dynamic planes when the
+    static ``solid`` interior ``(n-2, w or w-2)`` is passed separately --
     and the result keeps the plane count while shrinking to the interior
-    ``n-2`` rows (each step consumes one apron row per side).
+    ``n-2`` rows (each step consumes one apron row per side) and, with
+    ``shrink_x`` (the 2-D blocked tile), the interior ``w-2`` words (each
+    step also consumes one apron word per side, dropping the words whose
+    ``_roll_x`` carry bit wrapped inside the tile).
     ``rows_abs`` is the ``(n, 1)`` int32 array of RNG/parity row
-    coordinates of ``cur``'s rows, ``cols_abs`` the ``(1, wd)`` int32
+    coordinates of ``cur``'s rows, ``cols_abs`` the ``(1, w)`` int32
     array of RNG word coordinates (global offsets applied, periodic wrap
     already reduced).
     """
-    n = cur.shape[1]
+    n, w = cur.shape[1], cur.shape[2]
+    xs = slice(1, w - 1) if shrink_x else slice(0, w)
     even = (rows_abs % 2) == 0
 
     # --- stream (paper's "motion", Listing 1) -------------------------------
@@ -208,17 +228,17 @@ def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
             moved = jnp.where(even, _shift_x(src, dx0), _shift_x(src, dx1))
         # Destination-centric: interior row r (cur row r+1) receives from the
         # source cur row r + 1 - dy; parity above was that of the source row.
-        streamed.append(moved[1 - dy:n - 1 - dy])
-    streamed.append(cur[rules.REST_BIT, 1:n - 1])    # rest particles stay
+        streamed.append(moved[1 - dy:n - 1 - dy, xs])
+    streamed.append(cur[rules.REST_BIT, 1:n - 1, xs])   # rest particles stay
     # geometry is static: from the stack, or the read-only solid operand
     streamed.append(solid if solid is not None
-                    else cur[rules.SOLID_BIT, 1:n - 1])
+                    else cur[rules.SOLID_BIT, 1:n - 1, xs])
 
     # --- collide (paper's LUT scattering, as boolean algebra) ---------------
     tt = jnp.asarray(t, _U32)
     if rng_in_kernel:
         rows_blk = rows_abs[1:n - 1].astype(_U32)
-        cols_blk = cols_abs.astype(_U32)
+        cols_blk = cols_abs[:, xs].astype(_U32)
         chi = _word_u32(rows_blk, cols_blk, tt, salt=0x11)
     else:
         chi = chi_pre
@@ -235,22 +255,24 @@ def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
     return jnp.stack(planes[:7] if solid is not None else planes)
 
 
-def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
-               h: int, bh: int, pq: int, steps: int, rng_in_kernel: bool,
-               variant: str = "fhp2", extended: bool = False,
-               static_solid: bool = False):
-    """``steps`` fused FHP updates for a band of ``bh`` rows.
+def fhp_kernel(s_ref, *rest,
+               h: int, bh: int, wd: int, bw: int, pq: int, steps: int,
+               rng_in_kernel: bool, variant: str = "fhp2",
+               extended: bool = False, static_solid: bool = False):
+    """``steps`` fused FHP updates for a ``(bh, bw)`` tile.
 
     Refs (inputs first, output last, per pallas_call convention): the
     scalar block ``[t, y0, xw0, hg, wdg]`` (step counter + global
     coordinates of local element (0,0) + global lattice extents in rows /
     words -- traced, so the kernel composes with shard_map where the
-    offsets are axis-index dependent), the three overlapping row-band
-    views of the plane stack, then -- with ``static_solid`` -- the three
-    overlapping band views of the read-only solid plane, then -- when
-    ``rng_in_kernel`` is False (T=1 only) -- the precomputed chirality /
-    force planes for the band, and finally the output band.  Grid is
-    ``(B, H/bh)``: axis 0 is the ensemble lane, axis 1 the row band.
+    offsets are axis-index dependent), the overlapping views of the plane
+    stack -- three row bands when x is un-blocked (``bw == wd``), nine
+    ``(bh, bw)`` tiles (the 3x3 y-x neighbourhood, row-major) when x is
+    blocked -- then, with ``static_solid``, the same number of views of
+    the read-only solid plane, then -- when ``rng_in_kernel`` is False
+    (T=1 only) -- the precomputed chirality / force planes for the tile,
+    and finally the output tile.  Grid is ``(B, H/bh, Wd/bw)``: axis 0 is
+    the ensemble lane, axis 1 the row band, axis 2 the word block.
 
     ``extended`` selects the non-wrapping shard mode: RNG / parity rows
     reduce the *global* row ``(y0 + local) mod hg`` and words reduce
@@ -261,65 +283,90 @@ def fhp_kernel(s_ref, up_ref, mid_ref, down_ref, *rest,
 
     ``static_solid`` selects the 7-dynamic-plane layout (module
     docstring): the plane refs carry [moving x6, rest]; the solid band is
-    assembled from its own three views once and sliced per unrolled step.
+    assembled from its own views once and sliced per unrolled step.
     """
-    out_ref = rest[-1]
+    x_blocked = bw < wd
+    nv = 9 if x_blocked else 3
+    plane_refs = rest[:nv]
+    rest = rest[nv:]
     if static_solid:
-        sol_up, sol_mid, sol_down = rest[0], rest[1], rest[2]
-        extra_refs = rest[3:-1]
-    else:
-        extra_refs = rest[:-1]
+        sol_refs, rest = rest[:nv], rest[nv:]
+    extra_refs = rest[:-1]
+    out_ref = rest[-1]
     i = pl.program_id(1)
+    j = pl.program_id(2)
     t0 = s_ref[0, 0]
     y0 = s_ref[0, 1]
     xw0 = s_ref[0, 2]
     T = steps
-    wd = mid_ref.shape[-1]
-
-    # RNG word coordinates of the block's words (the x direction is
-    # un-blocked, so these are launch-wide constants).
-    col_iota = jax.lax.broadcasted_iota(jnp.int32, (1, wd), 1)
-    cols_abs = xw0 + col_iota
-    if extended:
-        cols_abs = cols_abs % s_ref[0, 4]          # mod Wd_g: global words
+    hx = T if x_blocked else 0                 # x apron width in words
 
     # Overlapping read: T halo rows above = tail of the upper band, T halo
-    # rows below = head of the lower band.  In periodic mode the band index
-    # maps wrap, so the global y wrap matches the jnp.roll reference
+    # rows below = head of the lower band; with x blocking also T halo
+    # words from the left/right (and corner) tiles.  In periodic mode the
+    # index maps wrap, so the global wraps match the jnp.roll reference
     # exactly; in extended mode they clamp (the halo is apron data already
-    # inside the array, and edge bands compute garbage only in rows the
-    # validity contract drops).
-    cur = jnp.concatenate(
-        [up_ref[0, :, bh - T:bh, :], mid_ref[0], down_ref[0, :, 0:T, :]],
-        axis=1)
+    # inside the array, and edge tiles compute garbage only in rows/words
+    # the validity contract drops).
+    ysl = ((0, slice(bh - T, bh)), (1, slice(None)), (2, slice(0, T)))
+    if x_blocked:
+        xsl = ((0, slice(bw - T, bw)), (1, slice(None)), (2, slice(0, T)))
+
+        def assemble(refs, lead):
+            cols = []
+            for xi, xcut in xsl:
+                parts = [(refs[yi * 3 + xi][0] if lead
+                          else refs[yi * 3 + xi][...])[..., ycut, xcut]
+                         for yi, ycut in ysl]
+                cols.append(jnp.concatenate(parts, axis=-2))
+            return jnp.concatenate(cols, axis=-1)
+    else:
+        def assemble(refs, lead):
+            parts = [(refs[yi][0] if lead else refs[yi][...])[..., ycut, :]
+                     for yi, ycut in ysl]
+            return jnp.concatenate(parts, axis=-2)
+
+    cur = assemble(plane_refs, lead=True)
     if static_solid:
-        # Solid rows matching cur's initial bh + 2T extent; step s works
-        # on band rows [s, n0 - s), so its interior is band[s+1:n0-s-1].
-        solid_band = jnp.concatenate(
-            [sol_up[bh - T:bh, :], sol_mid[...], sol_down[0:T, :]], axis=0)
+        # Solid extent matching cur's initial (bh + 2T, bw + 2*hx) tile;
+        # step s works on tile rows [s, n0 - s) and words [s, w0 - s), so
+        # its interior is band[s+1:n0-s-1, s+1:w0-s-1] (x only if blocked).
+        solid_band = assemble(sol_refs, lead=False)
 
     for s in range(T):
         n = cur.shape[1]                      # bh + 2 * (T - s)
-        # Local row of cur row r is  i*bh - (T - s) + r.  Periodic mode
-        # reduces it mod the *local* lattice height so rows past the local
-        # wrap hash (and stream with the parity of) the owning row's
-        # coordinates; extended mode reduces the *global* row mod H_g so
-        # apron rows across the global wrap draw the owning shard's stream
-        # -- required for the intermediate-step apron rows to be bit-exact.
+        w = cur.shape[2]                      # bw + 2 * (hx - s*x_blocked)
+        # Local row of cur row r is  i*bh - (T - s) + r  (and word c is
+        # j*bw - (hx - s) + c when x is blocked).  Periodic mode reduces
+        # them mod the *local* lattice extents so coordinates past the
+        # local wrap hash (and stream with the parity of) the owning
+        # cell's coordinates; extended mode reduces the *global*
+        # coordinates mod (H_g, Wd_g) so apron cells across the global
+        # wrap draw the owning shard's stream -- required for the
+        # intermediate-step apron compute to be bit-exact.
         row_iota = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+        col_iota = jax.lax.broadcasted_iota(jnp.int32, (1, w), 1)
+        xoff = j * bw - (hx - s if x_blocked else 0)
         if extended:
             rows_abs = (y0 + i * bh - (T - s) + row_iota) % s_ref[0, 3]
+            cols_abs = (xw0 + xoff + col_iota) % s_ref[0, 4]
         else:
             rows_abs = y0 + (i * bh - (T - s) + row_iota) % h
-        sol = solid_band[s + 1:s + n - 1] if static_solid else None
+            cols_abs = xw0 + (xoff + col_iota) % wd
+        if static_solid:
+            sol = solid_band[s + 1:s + n - 1,
+                             s + 1:s + w - 1] if x_blocked else \
+                  solid_band[s + 1:s + n - 1]
+        else:
+            sol = None
         if rng_in_kernel:
             cur = _fused_step(cur, rows_abs, cols_abs, t0 + s, pq,
-                              True, variant, solid=sol)
+                              True, variant, solid=sol, shrink_x=x_blocked)
         else:
             cur = _fused_step(cur, rows_abs, cols_abs, t0 + s, pq, False,
                               variant, chi_pre=extra_refs[0][...],
                               acc_pre=extra_refs[-1][...] if pq > 0 else None,
-                              solid=sol)
+                              solid=sol, shrink_x=x_blocked)
 
     out_ref[0] = cur
 
@@ -328,71 +375,94 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
                   rng_in_kernel: bool, interpret: bool,
                   variant: str = "fhp2", steps: int = 1, batch: int = 1,
                   extended: bool = False, donate: bool = False,
-                  static_solid: bool = False):
+                  static_solid: bool = False, bw: int = 0):
     """Build the pallas_call for a (B, 8, h, wd) plane stack -- or, with
     ``static_solid``, a (B, 7, h, wd) dynamic stack plus a read-only
     (h, wd) solid plane operand (module docstring).
 
-    ``extended`` builds the non-wrapping shard-mode kernel (clamped band
-    maps + global-coordinate RNG; see module docstring).  ``donate``
-    aliases the plane-stack input to the output (no HBM double-buffer);
-    only legal in extended mode with a single row band per lane (``bh ==
-    h``), where every grid step reads its whole lane before writing --
-    multi-band grids would read band i-1 after step i-1's writeback (see
+    ``bw`` (block_words, 0 = full width) switches on 2-D (x x y) blocking:
+    the grid gains a word-block axis and every view becomes a (bh, bw)
+    tile with a T-word x apron (module docstring).  ``extended`` builds
+    the non-wrapping shard-mode kernel (clamped band maps +
+    global-coordinate RNG; see module docstring).  ``donate`` aliases the
+    plane-stack input to the output (no HBM double-buffer); only legal in
+    extended mode with a single tile per lane (``bh == h`` and ``bw ==
+    wd``), where every grid step reads its whole lane before writing --
+    multi-tile grids would read tile i-1 after step i-1's writeback (see
     module docstring).
     """
+    bw = bw or wd
+    x_blocked = bw < wd
     assert h % bh == 0, f"H={h} must be a multiple of block_rows={bh}"
+    assert wd % bw == 0, f"Wd={wd} must be a multiple of block_words={bw}"
     assert 1 <= steps <= bh, \
         f"steps_per_launch={steps} needs a {steps}-row halo <= block_rows={bh}"
+    assert not x_blocked or steps <= bw, \
+        f"steps_per_launch={steps} needs a {steps}-word x apron <= " \
+        f"block_words={bw}"
     assert rng_in_kernel or steps == 1, \
         "precomputed RNG planes only cover one step: steps_per_launch == 1"
-    assert not donate or (extended and bh == h), \
-        "input_output_aliases needs extended mode and a single row band " \
-        "(multi-band in-place update is a read-after-write hazard)"
+    assert not donate or (extended and bh == h and bw == wd), \
+        "input_output_aliases needs extended mode and a single tile " \
+        "(multi-tile in-place update is a read-after-write hazard)"
     assert rng_in_kernel or not static_solid, \
         "static_solid is a fused-path feature: rng_in_kernel=True"
     nb = h // bh
+    nbx = wd // bw
     np_ = 7 if static_solid else 8
 
-    band = lambda f: pl.BlockSpec((1, np_, bh, wd), f)
-    if extended:
-        up = band(lambda b, i: (b, 0, jnp.maximum(i - 1, 0), 0))
-        down = band(lambda b, i: (b, 0, jnp.minimum(i + 1, nb - 1), 0))
-    else:
-        up = band(lambda b, i: (b, 0, (i + nb - 1) % nb, 0))
-        down = band(lambda b, i: (b, 0, (i + 1) % nb, 0))
-    in_specs = [
-        pl.BlockSpec((1, 5), lambda b, i: (0, 0)),   # [t, y0, xw0, hg, wdg]
-        up,                                           # upper halo band
-        band(lambda b, i: (b, 0, i, 0)),              # own band
-        down,                                         # lower halo band
-    ]
-    if static_solid:
-        # The solid plane's own three overlapping band views; shared by
-        # every ensemble lane (the index map ignores b).
-        sband = lambda f: pl.BlockSpec((bh, wd), f)
+    def yidx(dy):
+        if dy == 0:
+            return lambda i: i
+        if extended:                              # clamp at the array edge
+            return (lambda i: jnp.maximum(i - 1, 0)) if dy < 0 else \
+                   (lambda i: jnp.minimum(i + 1, nb - 1))
+        return (lambda i: (i + nb - 1) % nb) if dy < 0 else \
+               (lambda i: (i + 1) % nb)
+
+    def xidx(dx):
+        if dx == 0:
+            return lambda j: j
         if extended:
-            in_specs += [sband(lambda b, i: (jnp.maximum(i - 1, 0), 0)),
-                         sband(lambda b, i: (i, 0)),
-                         sband(lambda b, i: (jnp.minimum(i + 1, nb - 1), 0))]
-        else:
-            in_specs += [sband(lambda b, i: ((i + nb - 1) % nb, 0)),
-                         sband(lambda b, i: (i, 0)),
-                         sband(lambda b, i: ((i + 1) % nb, 0))]
+            return (lambda j: jnp.maximum(j - 1, 0)) if dx < 0 else \
+                   (lambda j: jnp.minimum(j + 1, nbx - 1))
+        return (lambda j: (j + nbx - 1) % nbx) if dx < 0 else \
+               (lambda j: (j + 1) % nbx)
+
+    # The overlapping-view neighbourhood, row-major over (dy, dx): three
+    # row bands when x is un-blocked, the full 3x3 tile neighbourhood
+    # (corners included -- diagonal streaming crosses them) when blocked.
+    hood = [(dy, dx) for dy in (-1, 0, 1)
+            for dx in ((-1, 0, 1) if x_blocked else (0,))]
+    band = lambda fy, fx: pl.BlockSpec(
+        (1, np_, bh, bw), lambda b, i, j, fy=fy, fx=fx: (b, 0, fy(i), fx(j)))
+    in_specs = [
+        pl.BlockSpec((1, 5), lambda b, i, j: (0, 0)),  # [t, y0, xw0, hg, wdg]
+    ]
+    in_specs += [band(yidx(dy), xidx(dx)) for dy, dx in hood]
+    if static_solid:
+        # The solid plane's own overlapping views; shared by every
+        # ensemble lane (the index map ignores b).
+        sband = lambda fy, fx: pl.BlockSpec(
+            (bh, bw), lambda b, i, j, fy=fy, fx=fx: (fy(i), fx(j)))
+        in_specs += [sband(yidx(dy), xidx(dx)) for dy, dx in hood]
     if not rng_in_kernel:
-        in_specs.append(pl.BlockSpec((bh, wd), lambda b, i: (i, 0)))   # chi
+        in_specs.append(
+            pl.BlockSpec((bh, bw), lambda b, i, j: (i, j)))            # chi
         if pq > 0:
             in_specs.append(
-                pl.BlockSpec((bh, wd), lambda b, i: (i, 0)))           # accel
+                pl.BlockSpec((bh, bw), lambda b, i, j: (i, j)))        # accel
 
-    kern = functools.partial(fhp_kernel, h=h, bh=bh, pq=pq, steps=steps,
-                             rng_in_kernel=rng_in_kernel, variant=variant,
-                             extended=extended, static_solid=static_solid)
+    kern = functools.partial(fhp_kernel, h=h, bh=bh, wd=wd, bw=bw, pq=pq,
+                             steps=steps, rng_in_kernel=rng_in_kernel,
+                             variant=variant, extended=extended,
+                             static_solid=static_solid)
     return pl.pallas_call(
         kern,
-        grid=(batch, nb),
+        grid=(batch, nb, nbx),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, np_, bh, wd), lambda b, i: (b, 0, i, 0)),
+        out_specs=pl.BlockSpec((1, np_, bh, bw),
+                               lambda b, i, j: (b, 0, i, j)),
         out_shape=jax.ShapeDtypeStruct((batch, np_, h, wd), jnp.uint32),
         input_output_aliases={1: 0} if donate else {},
         interpret=interpret,

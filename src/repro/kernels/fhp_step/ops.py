@@ -10,11 +10,13 @@ remainder launch).  ``run_extended`` is the shard-map hot path: it
 advances a halo-extended shard array ``depth`` steps in ceil(depth/T)
 donated launches with **global**-coordinate RNG (mod ``hg``/``wdg``), so
 one depth-``d`` exchange feeds ``d`` in-kernel steps.  ``autotune_launch``
-picks ``(block_rows, steps_per_launch)`` -- or, given ``max_depth``, the
-joint ``(block_rows, steps_per_launch, depth)`` for the sharded path
-including the exchange bandwidth + latency terms -- under the VMEM budget
-from a bytes-per-site-update model.  On non-TPU backends the kernel runs
-in interpret mode.
+picks the 2-D tile ``(block_rows, block_words, steps_per_launch)`` -- or,
+given ``max_depth``, the joint ``(block_rows, block_words,
+steps_per_launch, depth)`` for the sharded path including the exchange
+bandwidth + latency terms -- under the VMEM budget from a
+bytes-per-site-update model; ``block_words`` below the width selects the
+x-blocked kernel grid that lifts the VMEM ceiling on wide shards.  On
+non-TPU backends the kernel runs in interpret mode.
 """
 from __future__ import annotations
 
@@ -41,30 +43,47 @@ COMPUTE_ROW_WEIGHT = 0.2
 MAX_STEPS_PER_LAUNCH = 8
 
 
-def vmem_bytes(bh: int, wd: int, steps: int = 1) -> int:
+def vmem_bytes(bh: int, wd: int, steps: int = 1, block_words: int = 0,
+               static_solid: bool = False) -> int:
     """Estimated VMEM working set of one program instance.
 
-    3 resident input bands + 1 output band, plus the unrolled working
-    stack and boolean temporaries on the widest (first-step) extent of
-    ``bh + 2 * steps`` rows.
+    Resident input views + 1 output tile (3 + 1 row bands when x is
+    un-blocked; 9 + 1 ``(bh, bw)`` tiles for the 2-D blocked grid), plus
+    the unrolled working stack and boolean temporaries on the widest
+    (first-step) extent of ``bh + 2*steps`` rows (x ``bw + 2*steps``
+    words when x is blocked).  ``static_solid`` adds the read-only
+    pre-extended solid operand: its own resident views plus the assembled
+    solid band -- without it the autotuner could admit a tile that
+    overflows the budget on the 7-plane static path.
     """
-    band = 8 * bh * wd * 4
-    ext = 8 * (bh + 2 * steps) * wd * 4       # current plane stack
-    temps = 24 * (bh + 2 * steps) * wd * 4    # collision conditions + streams
-    return 4 * band + ext + temps
+    bw = min(block_words, wd) if block_words else wd
+    x_blocked = bw < wd
+    np_ = 7 if static_solid else 8
+    views = 9 if x_blocked else 3
+    ew = bw + 2 * steps if x_blocked else bw
+    band = np_ * bh * bw * 4
+    ext = np_ * (bh + 2 * steps) * ew * 4     # current plane stack
+    temps = 24 * (bh + 2 * steps) * ew * 4    # collision conditions + streams
+    total = (views + 1) * band + ext + temps
+    if static_solid:
+        total += views * bh * bw * 4 + (bh + 2 * steps) * ew * 4
+    return total
 
 
-def _pick_bh(wd: int, steps: int, h: int | None) -> int:
+def _pick_bh(wd: int, steps: int, h: int | None, block_words: int = 0,
+             static_solid: bool = False) -> int:
     """Largest power-of-two band height (<=32) that admits the
     ``steps``-row halo, fits VMEM, and (when ``h`` is given) divides H."""
     def ok(bh):
         return ((h is None or h % bh == 0)
-                and vmem_bytes(bh, wd, steps) <= VMEM_BUDGET_BYTES)
+                and vmem_bytes(bh, wd, steps, block_words,
+                               static_solid) <= VMEM_BUDGET_BYTES)
     bh = 32
     while bh > steps and not ok(bh):
         bh //= 2
     if bh < steps or not ok(bh):
         raise ValueError(f"no valid block for H={h}, Wd={wd}, "
+                         f"block_words={block_words}, "
                          f"steps_per_launch={steps}")
     return bh
 
@@ -82,39 +101,85 @@ def pick_block_rows_extended(wd: int, steps: int = 1) -> int:
     return _pick_bh(wd, steps, None)
 
 
-def launch_cost(bh: int, steps: int) -> float:
-    """Modeled cost per useful site update, in HBM row-move units.
+def pick_tile_extended(wd: int, steps: int = 1,
+                       static_solid: bool = False) -> Tuple[int, int]:
+    """``(block_rows, block_words)`` for the extended path: the legacy
+    full-width 1-D band when it fits VMEM, else the widest power-of-two
+    word block that admits the ``steps``-word x apron and fits (the
+    extended path word-pads the array to a block multiple, so ``bw`` need
+    not divide the width)."""
+    try:
+        return _pick_bh(wd, steps, None, static_solid=static_solid), wd
+    except ValueError:
+        pass
+    bw = 1
+    while bw * 2 < wd:
+        bw *= 2
+    while bw >= max(steps, 1):
+        try:
+            return _pick_bh(wd, steps, None, block_words=bw,
+                            static_solid=static_solid), bw
+        except ValueError:
+            bw //= 2
+    raise ValueError(f"no valid 2-D tile for Wd={wd}, "
+                     f"steps_per_launch={steps}")
 
-    Per program per launch: ``bh + 2*steps`` rows read + ``bh`` rows
-    written, plus ``sum_s (bh + 2*(steps-s-1))`` rows of (cheap, weighted)
-    apron compute, for ``bh * steps`` useful row-updates.
+
+def launch_cost(bh: int, steps: int, block_words: int = 0,
+                width_words: int = 0) -> float:
+    """Modeled cost per useful site update, in HBM word-cell units.
+
+    Per program per launch: a ``(bh + 2*steps) x (bw + 2*hx)`` tile read
+    + a ``bh x bw`` tile written (``hx`` = ``steps`` when x is blocked,
+    else 0 -- the x-apron redundancy term), plus the shrinking apron
+    extents of (cheap, weighted) redundant compute, for ``bh * bw *
+    steps`` useful word-updates.  With ``block_words`` unset (or >= the
+    width) this reduces exactly to the legacy 1-D row-unit model.
     """
-    mem_rows = (bh + 2 * steps) + bh
-    compute_rows = bh * steps + steps * (steps - 1)
-    return (mem_rows + COMPUTE_ROW_WEIGHT * compute_rows) / (bh * steps)
+    bw = (min(block_words, width_words) if block_words and width_words
+          else block_words) or width_words or 1
+    x_blocked = bool(block_words and width_words and
+                     block_words < width_words)
+    hx = steps if x_blocked else 0
+    mem = (bh + 2 * steps) * (bw + 2 * hx) + bh * bw
+    comp = sum((bh + 2 * (steps - s - 1))
+               * (bw + 2 * (steps - s - 1) if x_blocked else bw)
+               for s in range(steps))
+    return (mem + COMPUTE_ROW_WEIGHT * comp) / (bh * bw * steps)
 
 
-def hbm_bytes_per_site(bh: int, steps: int) -> float:
+def hbm_bytes_per_site(bh: int, steps: int, block_words: int = 0,
+                       width_words: int = 0) -> float:
     """Modeled HBM traffic per site update for the fused T-step kernel."""
-    return 8 * 4 * ((bh + 2 * steps) + bh) / (32.0 * bh * steps)
+    bw = (min(block_words, width_words) if block_words and width_words
+          else block_words) or width_words or 1
+    x_blocked = bool(block_words and width_words and
+                     block_words < width_words)
+    hx = steps if x_blocked else 0
+    return (8 * 4 * ((bh + 2 * steps) * (bw + 2 * hx) + bh * bw)
+            / (32.0 * bh * bw * steps))
 
 
 def sharded_hbm_bytes_per_site(bh: int, steps: int, depth: int,
                                hl: int, wdl: int,
-                               static_solid: bool = False) -> float:
+                               static_solid: bool = False,
+                               block_words: int = 0) -> float:
     """Modeled HBM traffic per useful site update of the sharded
     extended-shard path (``roofline.analysis.sharded_fhp_traffic``)."""
     return _roofline.sharded_fhp_traffic(
         hl, wdl, depth=depth, T=steps, block_rows=bh,
+        block_words=block_words,
         static_solid=static_solid)["hbm_bytes_per_site_step"]
 
 
 def sharded_launch_cost(bh: int, steps: int, depth: int,
                         hl: int, wdl: int, *,
                         static_solid: bool = False,
+                        block_words: int = 0,
                         exchange_latency_s: float | None = None) -> float:
     """Modeled seconds per useful site update for the sharded path: HBM +
-    weighted apron compute + exchange bandwidth + exchange latency.
+    weighted apron compute (incl. the x-apron redundancy of a 2-D tile) +
+    exchange bandwidth + exchange latency.
 
     ``exchange_latency_s=None`` uses the measured ppermute round-trip
     latency when a real multi-chip mesh is attached, else the 3 us
@@ -123,9 +188,25 @@ def sharded_launch_cost(bh: int, steps: int, depth: int,
         exchange_latency_s = _roofline.measured_exchange_latency()
     return _roofline.sharded_fhp_traffic(
         hl, wdl, depth=depth, T=steps, block_rows=bh,
+        block_words=block_words,
         compute_row_weight=COMPUTE_ROW_WEIGHT,
         exchange_latency_s=exchange_latency_s,
         static_solid=static_solid)["total_s_per_site"]
+
+
+def _bw_candidates(width: int, divisors_only: bool):
+    """Word-block candidates for the joint tile search: the full width
+    (legacy 1-D row bands) plus descending powers of two.  The periodic
+    path needs ``bw | width``; the extended path pads, so any bw goes."""
+    cands = [width]
+    bw = 1
+    while bw * 2 < width:
+        bw *= 2
+    while bw >= 1:
+        if not divisors_only or width % bw == 0:
+            cands.append(bw)
+        bw //= 2
+    return cands
 
 
 def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
@@ -134,39 +215,48 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
                     static_solid: bool = False,
                     exchange_latency_s: float | None = None):
     """Choose the launch configuration minimizing modeled cost under the
-    VMEM budget.
+    VMEM budget -- the joint 2-D tile search.
 
     Single-device (``max_depth=None``): returns ``(block_rows,
-    steps_per_launch)`` minimizing ``launch_cost`` subject to
-    divisibility and halo depth <= block_rows.
+    block_words, steps_per_launch)`` minimizing ``launch_cost`` subject
+    to divisibility (both axes) and halo depth <= block extents.
+    ``block_words == wd`` is the legacy 1-D row-band kernel; a narrower
+    tile pays the x-apron redundancy term, so 2-D wins exactly when the
+    VMEM ceiling bars the 1-D band from a deeper T.
 
     Sharded (``max_depth`` set): ``h``/``wd`` are the per-shard ``hl`` /
-    ``wdl``; returns the joint ``(block_rows, steps_per_launch, depth)``
-    minimizing ``sharded_launch_cost`` -- HBM traffic of the extended
-    array plus the exchange bandwidth and per-exchange latency terms, so
-    deeper halos win exactly until apron redundancy outgrows the
-    amortised exchange cost.  The extended path has no divisibility
-    constraint (rows are padded), but the T-row halo must fit the block
-    and the depth must fit the one-word x halo (depth <= 31).
+    ``wdl``; returns the joint ``(block_rows, block_words,
+    steps_per_launch, depth)`` minimizing ``sharded_launch_cost`` -- HBM
+    traffic of the extended array plus the exchange bandwidth and
+    per-exchange latency terms, so deeper halos win exactly until apron
+    redundancy outgrows the amortised exchange cost.  The extended path
+    has no divisibility constraint (rows and words are padded), but the
+    T-row/T-word halo must fit the tile and the depth must fit the
+    one-word x halo (depth <= 31).  ``block_words`` here is a tile of
+    the *extended* width ``wdl + 2``.
 
     ``static_solid`` prices the 7-dynamic-plane schedule (cached solid
-    apron, sharded search only); ``exchange_latency_s=None`` resolves to
-    the measured ppermute latency (constant fallback off-mesh) -- only
-    for the sharded search, whose cost model is the only consumer.
+    apron + read-only solid operand in the VMEM model);
+    ``exchange_latency_s=None`` resolves to the measured ppermute latency
+    (constant fallback off-mesh) -- only for the sharded search, whose
+    cost model is the only consumer.
     """
     best = None
     best_cost = None
     if max_depth is None:
-        bh = 32
-        while bh >= 1:
-            if h % bh == 0:
-                for steps in range(1, min(bh, max_steps) + 1):
-                    if vmem_bytes(bh, wd, steps) > vmem_budget:
-                        break
-                    cost = launch_cost(bh, steps)
-                    if best_cost is None or cost < best_cost:
-                        best, best_cost = (bh, steps), cost
-            bh //= 2
+        for bw in _bw_candidates(wd, divisors_only=True):
+            x_blocked = bw < wd
+            bh = 32
+            while bh >= 1:
+                if h % bh == 0:
+                    t_cap = min(bh, max_steps, bw if x_blocked else bh)
+                    for steps in range(1, t_cap + 1):
+                        if vmem_bytes(bh, wd, steps, bw) > vmem_budget:
+                            break
+                        cost = launch_cost(bh, steps, bw, wd)
+                        if best_cost is None or cost < best_cost:
+                            best, best_cost = (bh, bw, steps), cost
+                bh //= 2
         if best is None:
             raise ValueError(f"no valid launch config for H={h}, Wd={wd}")
         return best
@@ -174,20 +264,27 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
     if exchange_latency_s is None:
         exchange_latency_s = _roofline.measured_exchange_latency()
     hl, wdl = h, wd
-    bh = 32
-    while bh >= 1:
-        # depth <= hl: the nearest-neighbour exchange cannot source a
-        # deeper apron than one shard's rows (distributed.py asserts it).
-        for depth in range(1, min(max_depth, 31, hl) + 1):
-            for steps in range(1, min(bh, max_steps, depth) + 1):
-                if vmem_bytes(bh, wdl + 2, steps) > vmem_budget:
-                    break
-                cost = sharded_launch_cost(
-                    bh, steps, depth, hl, wdl, static_solid=static_solid,
-                    exchange_latency_s=exchange_latency_s)
-                if best_cost is None or cost < best_cost:
-                    best, best_cost = (bh, steps, depth), cost
-        bh //= 2
+    we = wdl + 2                           # extended shard width in words
+    for bw in _bw_candidates(we, divisors_only=False):
+        x_blocked = bw < we
+        bh = 32
+        while bh >= 1:
+            # depth <= hl: the nearest-neighbour exchange cannot source a
+            # deeper apron than one shard's rows (distributed.py asserts).
+            for depth in range(1, min(max_depth, 31, hl) + 1):
+                t_cap = min(bh, max_steps, depth,
+                            bw if x_blocked else bh)
+                for steps in range(1, t_cap + 1):
+                    if vmem_bytes(bh, we, steps, bw,
+                                  static_solid) > vmem_budget:
+                        break
+                    cost = sharded_launch_cost(
+                        bh, steps, depth, hl, wdl,
+                        static_solid=static_solid, block_words=bw,
+                        exchange_latency_s=exchange_latency_s)
+                    if best_cost is None or cost < best_cost:
+                        best, best_cost = (bh, bw, steps, depth), cost
+            bh //= 2
     if best is None:
         raise ValueError(f"no valid sharded launch config for "
                          f"hl={hl}, wdl={wdl}")
@@ -195,10 +292,10 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "p_force", "block_rows", "rng_in_kernel", "interpret", "variant",
-    "steps_per_launch", "extended", "hg", "wdg", "donate"))
+    "p_force", "block_rows", "block_words", "rng_in_kernel", "interpret",
+    "variant", "steps_per_launch", "extended", "hg", "wdg", "donate"))
 def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
-                    y0=0, xw0=0, block_rows: int = 0,
+                    y0=0, xw0=0, block_rows: int = 0, block_words: int = 0,
                     rng_in_kernel: bool = True,
                     interpret: bool | None = None,
                     variant: str = "fhp2",
@@ -227,7 +324,12 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
     ``solid`` switches on static-geometry mode: ``planes`` then carries
     the 7 *dynamic* planes only and the (H, Wd) solid plane rides as a
     read-only operand shared by all lanes -- the kernel writes 7 planes
-    per launch instead of 8 (see ``kernel.py``)."""
+    per launch instead of 8 (see ``kernel.py``).
+
+    ``block_words`` (0 = full width) selects the 2-D (x x y) blocked grid:
+    each program owns a ``(block_rows, block_words)`` tile with a
+    ``steps_per_launch``-word x apron; ``block_words`` must divide ``Wd``
+    (``run_extended`` word-pads before calling)."""
     squeeze = planes.ndim == 3
     if squeeze:
         planes = planes[None]
@@ -256,13 +358,19 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
                          "maps re-read written bands)")
     bh = block_rows or (pick_block_rows_extended(wd, steps=T) if extended
                         else pick_block_rows(h, wd, steps=T))
+    bw = block_words or wd
     if T > bh:
         raise ValueError(f"steps_per_launch={T} > block_rows={bh}")
+    if bw < wd and T > bw:
+        raise ValueError(f"steps_per_launch={T} > block_words={bw}")
+    if wd % bw:
+        raise ValueError(f"block_words={bw} must divide Wd={wd} "
+                         f"(the extended path word-pads in run_extended)")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     pq = prng.quantize_p(p_force)
 
-    step = _k.make_fhp_step(h, wd, bh=bh, pq=pq,
+    step = _k.make_fhp_step(h, wd, bh=bh, bw=bw, pq=pq,
                             rng_in_kernel=rng_in_kernel, interpret=interpret,
                             variant=variant, steps=T, batch=b,
                             extended=extended, donate=donate,
@@ -273,9 +381,12 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
                          jnp.asarray(h if hg is None else hg, jnp.int32),
                          jnp.asarray(wd if wdg is None else wdg,
                                      jnp.int32)]).reshape(1, 5)
-    args = [scalars, planes, planes, planes]
+    # One binding of the array per overlapping view: 3 row bands, or the
+    # 3x3 tile neighbourhood when x is blocked.
+    nv = 9 if bw < wd else 3
+    args = [scalars] + [planes] * nv
     if static_solid:
-        args += [solid, solid, solid]
+        args += [solid] * nv
     if not rng_in_kernel:
         args.append(prng.chirality_words((h, wd), t, y0=y0, xw0=xw0))
         if pq > 0:
@@ -310,7 +421,7 @@ def run_pallas(planes: jnp.ndarray, steps: int, *, p_force: float = 0.0,
 def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
                  y0=0, xw0=0, hg: int, wdg: int,
                  steps_per_launch: int | None = None,
-                 block_rows: int = 0,
+                 block_rows: int = 0, block_words: int = 0,
                  solid_ext: jnp.ndarray | None = None, **kw) -> jnp.ndarray:
     """Advance a halo-extended shard array ``steps`` steps in
     ceil(steps / T) extended-mode launches (carry aliased in place when
@@ -331,35 +442,54 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
     dynamic planes, each launch takes the solid as a read-only operand,
     and -- because the cached apron holds the *true* global solid, not a
     validity-shrinking copy -- the same cache serves every launch and
-    every exchange round of the geometry's lifetime."""
+    every exchange round of the geometry's lifetime.
+
+    ``block_words`` (0 = auto) is the 2-D tile width in words: the array
+    is word-padded on the right to a block multiple (pad words draw
+    deterministic-garbage RNG that contaminates at most one bit per step
+    leftward -- it never crosses the outer halo word the validity
+    contract already drops).  Auto keeps the legacy full-width 1-D band
+    when it fits VMEM and splits x otherwise (``pick_tile_extended``)."""
     steps = int(steps)
     T = int(steps_per_launch or min(steps, MAX_STEPS_PER_LAUNCH))
     he, wde = ext.shape[-2], ext.shape[-1]
+    static_solid = solid_ext is not None
     cap = 1
     while cap < he:           # no taller than the array: padding is traffic
         cap *= 2
-    bh = block_rows or min(cap,
-                           pick_block_rows_extended(wde, steps=min(T, steps)))
+    bh, bw = block_rows, block_words
+    if not bw:
+        if bh:
+            bw = wde          # legacy callers: explicit rows, full width
+        else:
+            bh_auto, bw = pick_tile_extended(wde, steps=min(T, steps),
+                                             static_solid=static_solid)
+            bh = min(cap, bh_auto)
+    elif not bh:
+        bh = min(cap, _pick_bh(wde, min(T, steps), None, block_words=bw,
+                               static_solid=static_solid))
+    bw = min(bw, wde)
     pad = (-he) % bh
-    if pad:
-        widths = [(0, 0)] * (ext.ndim - 2) + [(0, pad), (0, 0)]
+    padw = (-wde) % bw
+    if pad or padw:
+        widths = [(0, 0)] * (ext.ndim - 2) + [(0, pad), (0, padw)]
         ext = jnp.pad(ext, widths)
     if solid_ext is not None:
         assert solid_ext.shape == (he, wde), (solid_ext.shape, he, wde)
-        if pad:
-            solid_ext = jnp.pad(solid_ext, [(0, pad), (0, 0)])
+        if pad or padw:
+            solid_ext = jnp.pad(solid_ext, [(0, pad), (0, padw)])
     # In-place carry (input_output_aliases) is only race-free when one
-    # band covers the lane: see kernel.make_fhp_step.
-    donate = bh == ext.shape[-2]
+    # tile covers the lane: see kernel.make_fhp_step.
+    donate = bh == ext.shape[-2] and bw == ext.shape[-1]
     full, rem = divmod(steps, T)
     for j in range(full):
         ext = fhp_step_pallas(ext, t0 + j * T, p_force=p_force, y0=y0,
                               xw0=xw0, steps_per_launch=T, block_rows=bh,
-                              extended=True, hg=hg, wdg=wdg, donate=donate,
-                              solid=solid_ext, **kw)
+                              block_words=bw, extended=True, hg=hg, wdg=wdg,
+                              donate=donate, solid=solid_ext, **kw)
     if rem:
         ext = fhp_step_pallas(ext, t0 + full * T, p_force=p_force, y0=y0,
                               xw0=xw0, steps_per_launch=rem, block_rows=bh,
-                              extended=True, hg=hg, wdg=wdg, donate=donate,
-                              solid=solid_ext, **kw)
-    return ext[..., :he, :]
+                              block_words=bw, extended=True, hg=hg, wdg=wdg,
+                              donate=donate, solid=solid_ext, **kw)
+    return ext[..., :he, :wde]

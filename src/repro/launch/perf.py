@@ -134,13 +134,14 @@ def exp_fhp_temporal() -> Dict:
             "launch_cost_row_units": ops.launch_cost(bh, t_launch),
             "redundant_row_fraction": (t_launch - 1) / bh,
         }
-    bh_t, t_t = ops.autotune_launch(h_shard, wd)
+    bh_t, bw_t, t_t = ops.autotune_launch(h_shard, wd)
     out["autotune"] = {
-        "block_rows": bh_t, "steps_per_launch": t_t,
-        "hbm_bytes_per_site_step": ops.hbm_bytes_per_site(bh_t, t_t),
+        "block_rows": bh_t, "block_words": bw_t, "steps_per_launch": t_t,
+        "hbm_bytes_per_site_step": ops.hbm_bytes_per_site(bh_t, t_t,
+                                                          bw_t, wd),
         "speedup_vs_T1_modeled":
             ops.hbm_bytes_per_site(ops.pick_block_rows(h_shard, wd), 1)
-            / ops.hbm_bytes_per_site(bh_t, t_t),
+            / ops.hbm_bytes_per_site(bh_t, t_t, bw_t, wd),
     }
     return out
 

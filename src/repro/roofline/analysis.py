@@ -320,7 +320,8 @@ def _ceil_to(x: int, m: int) -> int:
 
 
 def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
-                        block_rows: int, compute_row_weight: float = 0.2,
+                        block_rows: int, block_words: int = 0,
+                        compute_row_weight: float = 0.2,
                         exchange_latency_s: float = EXCHANGE_LATENCY_S,
                         hw: HW = V5E,
                         static_solid: bool = False) -> Dict[str, float]:
@@ -331,6 +332,14 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
     ``exchanges_per_step``, ``launches_per_step``, and the roofline-style
     time decomposition ``{hbm,compute,ici,latency,total}_s_per_site``.
 
+    ``block_words`` (0 / >= width = the legacy full-width 1-D band)
+    prices the 2-D (x x y) blocked kernel grid: each tile re-reads a
+    T-word x apron per side per launch and the redundant-compute extents
+    shrink in both axes -- the x-apron redundancy term the joint
+    ``(block_rows, block_words, T, depth)`` autotuner trades against the
+    VMEM ceiling.  The extended width ``wdl + 2`` is word-padded to a
+    block multiple, exactly like the row padding.
+
     ``static_solid`` prices the static-geometry cache: the solid plane is
     exchanged once per geometry (its one-time cost is reported as
     ``geometry_exchange_bytes``, excluded from the per-step totals) and
@@ -339,6 +348,12 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
     of 8 (reads stay at 8: the kernel still consumes the solid band).
     """
     assert 1 <= T <= block_rows and 1 <= depth, (T, block_rows, depth)
+    we = wdl + 2                               # extended width in words
+    bw = min(block_words, we) if block_words else we
+    x_blocked = bw < we
+    assert not x_blocked or T <= bw, (T, bw)
+    we_p = _ceil_to(we, bw)                    # word-padded extended width
+    nbx = we_p // bw
     he = hl + 2 * depth
     he_p = _ceil_to(he, block_rows)            # row-padded extended height
     nb = he_p // block_rows
@@ -348,17 +363,24 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
     write_pb = DYN_PLANE_BYTES if static_solid else PLANE_BYTES
     xchg_pb = DYN_PLANE_BYTES if static_solid else PLANE_BYTES
 
-    # HBM: per launch, every band reads bh + 2*Tj rows (all 8 planes --
-    # the solid band rides in either layout) and writes bh rows (7 or 8).
-    hbm_b = ((wdl + 2) * sum(PLANE_BYTES * nb * (block_rows + 2 * tj)
-                             + write_pb * he_p for tj in ts)
+    # HBM: per launch, every tile reads (bh + 2*Tj) x (bw + 2*Tj_x) cells
+    # (all 8 planes -- the solid band rides in either layout) and the
+    # padded array is written back once (7 or 8 planes).
+    def read_cells(tj):
+        return nb * nbx * (block_rows + 2 * tj) * (
+            bw + (2 * tj if x_blocked else 0))
+
+    hbm_b = (sum(PLANE_BYTES * read_cells(tj) + write_pb * he_p * we_p
+                 for tj in ts)
              / (sites * depth))
 
-    # Redundant compute: step s of a Tj-launch updates bh + 2*(Tj - s - 1)
-    # rows per band; useful work is hl rows per global step.
-    comp_rows = sum(nb * (block_rows + 2 * (tj - s - 1))
-                    for tj in ts for s in range(tj))
-    comp_b = (compute_row_weight * PLANE_BYTES * (wdl + 2) * comp_rows
+    # Redundant compute: step s of a Tj-launch updates (bh + 2*(Tj-s-1))
+    # x (bw + 2*(Tj-s-1) if x-blocked) cells per tile; useful work is
+    # hl x wdl cells per global step.
+    comp_cells = sum(nb * nbx * (block_rows + 2 * (tj - s - 1))
+                     * (bw + (2 * (tj - s - 1) if x_blocked else 0))
+                     for tj in ts for s in range(tj))
+    comp_b = (compute_row_weight * PLANE_BYTES * comp_cells
               / (sites * depth))
 
     # ICI: per exchange each shard sends depth rows up + depth rows down of
@@ -373,6 +395,8 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
     comp_s = comp_b / hw.hbm_bw
     ici_s = ici_b / hw.ici_bw
     return {
+        "block_words": float(bw),
+        "x_blocks": float(nbx),
         "hbm_bytes_per_site_step": hbm_b,
         "compute_row_equiv_bytes_per_site_step": comp_b,
         "ici_bytes_per_site_step": ici_b,

@@ -153,28 +153,30 @@ def test_measured_exchange_latency_constant_off_mesh():
             == autotune_launch(1024, 128, max_depth=16,
                                exchange_latency_s=lat))
     # a much larger latency must push the tuner at least as deep
-    _, _, d0 = autotune_launch(1024, 128, max_depth=16,
-                               exchange_latency_s=lat)
-    _, _, d1 = autotune_launch(1024, 128, max_depth=16,
-                               exchange_latency_s=100 * lat)
+    _, _, _, d0 = autotune_launch(1024, 128, max_depth=16,
+                                  exchange_latency_s=lat)
+    _, _, _, d1 = autotune_launch(1024, 128, max_depth=16,
+                                  exchange_latency_s=100 * lat)
     assert d1 >= d0
 
 
 def test_autotune_joint_sharded():
     for hl, wdl in [(256, 32), (1024, 128), (8192, 2048)]:
-        bh, T, d = autotune_launch(hl, wdl, max_depth=16)
-        assert 1 <= T <= min(bh, d) and 1 <= d <= 31, (bh, T, d)
-        assert vmem_bytes(bh, wdl + 2, T) <= VMEM_BUDGET_BYTES
+        bh, bw, T, d = autotune_launch(hl, wdl, max_depth=16)
+        assert 1 <= T <= min(bh, d) and 1 <= d <= 31, (bh, bw, T, d)
+        assert bw >= wdl + 2 or T <= bw, (bw, T)
+        assert vmem_bytes(bh, wdl + 2, T, bw) <= VMEM_BUDGET_BYTES
         # The exchange-latency term must push the tuner to a deep halo,
         # and the modeled sharded traffic must hit the stage-4 target.
         assert d >= 4, (hl, wdl, d)
-        assert sharded_hbm_bytes_per_site(bh, T, d, hl, wdl) <= 0.6
+        assert sharded_hbm_bytes_per_site(bh, T, d, hl, wdl,
+                                          block_words=bw) <= 0.6
     # depth can never exceed the shard rows (nearest-neighbour exchange)
-    bh, T, d = autotune_launch(8, 32, max_depth=16)
+    bh, bw, T, d = autotune_launch(8, 32, max_depth=16)
     assert d <= 8, d
-    # legacy single-device signature unchanged
-    bh, T = autotune_launch(1024, 128)
-    assert isinstance(bh, int) and isinstance(T, int)
+    # single-device signature: the 2-D (block_rows, block_words, T) tile
+    bh, bw, T = autotune_launch(1024, 128)
+    assert isinstance(bh, int) and isinstance(bw, int) and isinstance(T, int)
 
 
 # ---------------------------------------------------------------------------
@@ -207,6 +209,19 @@ SCRIPT = textwrap.dedent("""
             print(f"pallas depth={depth} T={T}: {ok}")
             if not ok:
                 failures.append(("2x2", depth, T))
+
+    # 2-D (x x y) blocked tile through the full mesh path: block_words
+    # below the extended shard width (wde = wdl + 2 = 6) forces the
+    # nine-view kernel grid; bw=4 also exercises word padding (6 -> 8)
+    for bw in (2, 4):
+        run2d = jax.jit(distributed.make_run(
+            mesh, 8, y_axes=("data",), x_axis="model", p_force=0.03,
+            depth=4, use_pallas=True, steps_per_launch=2,
+            block_rows=8, block_words=bw))
+        ok = bool((run2d(pd, 0) == ref).all())
+        print(f"pallas 2-D bw={bw} depth=4 T=2: {ok}")
+        if not ok:
+            failures.append(("2x2", "xblock", bw))
 
     # batched ensemble lanes through the sharded pallas path
     p2 = bitplane.pack(jnp.asarray(

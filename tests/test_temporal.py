@@ -94,12 +94,14 @@ def test_temporal_mass_conserved():
 
 def test_autotune_launch_valid():
     for h, wd in [(1024, 128), (4096, 512), (64, 32), (8192, 2048)]:
-        bh, T = autotune_launch(h, wd)
-        assert h % bh == 0 and 1 <= T <= bh
-        assert vmem_bytes(bh, wd, T) <= VMEM_BUDGET_BYTES
+        bh, bw, T = autotune_launch(h, wd)
+        assert h % bh == 0 and wd % bw == 0 and 1 <= T <= bh
+        assert bw == wd or T <= bw          # x apron must fit the tile
+        assert vmem_bytes(bh, wd, T, bw) <= VMEM_BUDGET_BYTES
         # temporal blocking must never be picked at a modeled-cost loss
         # over the single-step default config
-        assert launch_cost(bh, T) <= launch_cost(pick_block_rows(h, wd), 1)
+        assert (launch_cost(bh, T, bw, wd)
+                <= launch_cost(pick_block_rows(h, wd), 1))
 
 
 def test_pick_block_rows_respects_halo_depth():
