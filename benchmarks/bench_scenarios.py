@@ -1,10 +1,16 @@
 """Scenario suite through the sharded extended Pallas path: every
-registered scenario runs on a 2x2 fake-device mesh with the
-static-geometry cache (7 dynamic planes per exchange, solid apron
-exchanged once), is checked bit-exact against the single-device
-reference and mass-conserving, and emits per-scenario records with the
-modeled exchange-byte columns -- static vs dynamic geometry -- so
-BENCH_kernel.json shows the ~12.5% exchange cut per scenario.
+registered scenario runs on a 2x2 fake-device mesh under its own rule
+(``Scenario.variant`` -> ``core.rulespec``), is checked bit-exact
+against the single-device reference and conservation-audited, and emits
+per-scenario records into BENCH_kernel.json.
+
+FHP scenarios use the static-geometry cache (7 dynamic planes per
+exchange, solid apron exchanged once; the modeled static-vs-dynamic
+columns show the ~12.5% exchange cut).  Rules without a solid plane
+(``bml_city``) take the dynamic path with per-species car-count
+conservation and the jam-fraction order parameter in the record --
+2-plane BML also demonstrates the per-rule bytes/site scaling of the
+traffic model (``n_planes``).
 
 Wall clock is only meaningful on a real multi-chip backend (CPU runs the
 kernel in interpret mode); the durable outputs are the bit-exactness /
@@ -34,7 +40,7 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding
     from repro import scenarios
-    from repro.core import bitplane, distributed
+    from repro.core import bitplane, distributed, rulespec
     from repro.geometry import raster
     from repro.kernels.fhp_step.ops import pick_block_rows_extended
     from repro.roofline.analysis import sharded_fhp_traffic
@@ -50,14 +56,16 @@ SCRIPT = textwrap.dedent("""
 
     for name in scenarios.names():
         sc = scenarios.get(name, height=h, width=w)
+        spec = sc.rule()
+        static = spec.solid_plane is not None
         planes = sc.initial_planes()
-        m0 = int(bitplane.density_total(planes))
-        ref = bitplane.run_planes(planes, steps, p_force=sc.p_force)
+        ref = rulespec.run_planes_rule(planes, steps, spec,
+                                       p_force=sc.p_force)
         pd = jax.device_put(planes, sh)
         run = jax.jit(distributed.make_run(
             mesh, steps, y_axes=("data",), x_axis="model",
             p_force=sc.p_force, depth=depth, use_pallas=True,
-            steps_per_launch=T, static_solid=True))
+            steps_per_launch=T, static_solid=static, variant=sc.variant))
         out = run(pd, 0)
         out.block_until_ready()
         t0 = time.perf_counter()
@@ -65,27 +73,36 @@ SCRIPT = textwrap.dedent("""
         out.block_until_ready()
         dt = time.perf_counter() - t0
         exact = bool((out == ref).all())
-        conserved = int(bitplane.density_total(out)) == m0
-        assert exact, f"{name}: sharded static path diverged from reference"
-        assert conserved, f"{name}: mass not conserved"
+        impl = "pallas-sharded-static" if static else "pallas-sharded"
+        assert exact, f"{name}: sharded {impl} path diverged from reference"
+
+        def counts(p):
+            return [int(jax.lax.population_count(p[i]).sum())
+                    for i in spec.mass_planes]
+
+        c0, c1 = counts(planes), counts(out)
+        conserved = (c0 == c1 if spec.per_plane_conserved
+                     else sum(c0) == sum(c1))
+        assert conserved, f"{name}: mass not conserved ({c0} -> {c1})"
         drag = {}
         for n, g in sc.obstacles:
             words = jnp.asarray(raster.solid_words(g, (h, w // 32)))
             px2, py = observables.solid_momentum(out, words)
             drag[n] = [int(px2), int(py)]
         m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T, block_rows=bh,
-                                static_solid=True)
+                                static_solid=static,
+                                n_planes=spec.n_planes)
         m8 = sharded_fhp_traffic(hl, wdl, depth=depth, T=T, block_rows=bh,
-                                 static_solid=False)
-        rec = {"bench": "scenarios", "impl": "pallas-sharded-static",
+                                 static_solid=False,
+                                 n_planes=spec.n_planes)
+        rec = {"bench": "scenarios", "impl": impl,
                "backend": jax.default_backend(), "mesh": [2, 2],
-               "scenario": name, "depth": depth, "T": T, "B": 1,
+               "scenario": name, "rule": sc.variant,
+               "n_planes": spec.n_planes, "depth": depth, "T": T, "B": 1,
                "steps": steps, "lattice": [h, w], "smoke": smoke,
-               "structural": False, "static_solid": True,
+               "structural": False, "static_solid": static,
                "bit_exact": exact, "mass_conserved": conserved,
                "sites_per_sec": h * w * steps / dt,
-               "solid_sites": int(jnp.sum(jax.lax.population_count(
-                   planes[7]))),
                "obstacle_momentum": drag,
                "block_rows": bh,
                "model_hbm_bytes_per_site": m["hbm_bytes_per_site_step"],
@@ -97,6 +114,12 @@ SCRIPT = textwrap.dedent("""
                        / m8["ici_bytes_per_site_step"],
                "model_exchanges_per_step": m["exchanges_per_step"],
                "model_launches_per_step": m["launches_per_step"]}
+        if static:
+            rec["solid_sites"] = int(jnp.sum(jax.lax.population_count(
+                planes[spec.solid_plane])))
+        else:
+            rec["jam_fraction"] = float(observables.jam_fraction(out, steps))
+            rec["car_counts"] = c1
         print("RECORD " + json.dumps(rec))
     print("BENCH_DONE")
 """)

@@ -15,11 +15,16 @@
 # gate: tier1 includes tests/test_xblock.py, bench_temporal's smoke
 # profile times the 1-D vs 2-D tile on the same lattice, and the check
 # below asserts the emitted BENCH_kernel.json carries both the headline
-# block and a timed 2-D (block_words < Wd) record.
+# block and a timed 2-D (block_words < Wd) record.  The rule-plugin
+# gate: ``pytest -m rules`` is the cross-rule conformance sweep (every
+# registered rule vs its byte oracle over T x block_words x
+# periodic/extended x batched), and the JSON check asserts the BML
+# traffic scenario produced a timed record under the 2-plane rule.
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -m tier1 -x -q
+python -m pytest -m rules -q
 python -m benchmarks.run --smoke
 python - <<'EOF'
 import json
@@ -29,5 +34,8 @@ assert hl["best_single_device"] and hl["best_single_device"]["sites_per_sec"]
 assert hl["best_sharded"] and hl["best_sharded"]["sites_per_sec"]
 assert any(r.get("xblock") == "2d" and r.get("sites_per_sec")
            for r in d["records"]), "no timed 2-D x-block record"
-print("BENCH_kernel.json gate: headline + 2-D x-block record present")
+assert any(r.get("scenario") == "bml_city" and r.get("rule") == "bml"
+           and r.get("bit_exact") and r.get("sites_per_sec")
+           for r in d["records"]), "no timed bml_city record"
+print("BENCH_kernel.json gate: headline + 2-D x-block + bml_city present")
 EOF

@@ -1,2 +1,2 @@
 from repro.checkpoint.store import (CheckpointManager, latest_step,  # noqa: F401
-                                    restore, save)
+                                    load_meta, restore, save)

@@ -44,13 +44,19 @@ def _flatten(tree):
     return out
 
 
-def save(directory: str, step: int, tree: Any) -> str:
-    """Synchronous save.  Returns the checkpoint path."""
+def save(directory: str, step: int, tree: Any,
+         meta: Optional[dict] = None) -> str:
+    """Synchronous save.  Returns the checkpoint path.
+
+    ``meta`` is an optional JSON-serializable dict stored in the
+    manifest (e.g. ``{"rule": "fhp3", "t": 40}``): everything a restart
+    needs to replay bit-exactly that is not derivable from the arrays
+    themselves -- read it back with ``load_meta``."""
     tmp = os.path.join(directory, f"tmp_{step}")
     final = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(tmp, exist_ok=True)
     flat = _flatten(tree)
-    manifest = {"step": step, "leaves": {}}
+    manifest = {"step": step, "leaves": {}, "meta": meta or {}}
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
         fn = _SAFE.sub("_", key) + ".npy"
@@ -72,6 +78,14 @@ def latest_step(directory: str) -> Optional[int]:
              if d.startswith("step_")
              and os.path.exists(os.path.join(directory, d, "manifest.json"))]
     return max(steps) if steps else None
+
+
+def load_meta(directory: str, step: int) -> dict:
+    """The ``meta`` dict stored with ``save`` (empty for old
+    checkpoints)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("meta", {})
 
 
 def restore(directory: str, step: int, target_tree: Any,
@@ -131,9 +145,9 @@ class CheckpointManager:
             item = self._q.get()
             if item is None:
                 return
-            step, host_tree = item
+            step, host_tree, meta = item
             try:
-                save(self.directory, step, host_tree)
+                save(self.directory, step, host_tree, meta=meta)
                 self._gc()
             except Exception as e:  # pragma: no cover
                 self._errors.append(e)
@@ -148,9 +162,9 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.directory,
                                        f"step_{s:08d}"), ignore_errors=True)
 
-    def save_async(self, step: int, tree: Any):
+    def save_async(self, step: int, tree: Any, meta: Optional[dict] = None):
         host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-        self._q.put((step, host))
+        self._q.put((step, host, meta))
 
     def wait(self):
         self._q.join()

@@ -32,14 +32,15 @@ WORD = 32
 _U32 = jnp.uint32
 
 
-def pack(state: jnp.ndarray) -> jnp.ndarray:
-    """(..., H, W) uint8 bytes -> (..., 8, H, W//32) uint32 planes.
-    W % 32 == 0; leading axes are ensemble lanes."""
+def pack(state: jnp.ndarray, n_planes: int = 8) -> jnp.ndarray:
+    """(..., H, W) uint8 bytes -> (..., n_planes, H, W//32) uint32 planes.
+    W % 32 == 0; leading axes are ensemble lanes.  ``n_planes`` is the
+    rule's plane count (8 for FHP, 2 for BML; see ``core.rulespec``)."""
     *lead, h, w = state.shape
     assert w % WORD == 0, f"W={w} must be a multiple of {WORD}"
     weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=_U32))
     planes = []
-    for i in range(8):
+    for i in range(n_planes):
         bits = ((state >> i) & 1).astype(_U32).reshape(
             *lead, h, w // WORD, WORD)
         planes.append((bits * weights).sum(axis=-1, dtype=_U32))
@@ -47,11 +48,11 @@ def pack(state: jnp.ndarray) -> jnp.ndarray:
 
 
 def unpack(planes: jnp.ndarray) -> jnp.ndarray:
-    """(..., 8, H, W//32) uint32 planes -> (..., H, W) uint8 bytes."""
-    *lead, _, h, wd = planes.shape
+    """(..., n_planes, H, W//32) uint32 planes -> (..., H, W) uint8 bytes."""
+    *lead, np_, h, wd = planes.shape
     shifts = jnp.arange(WORD, dtype=_U32)
     state = jnp.zeros((*lead, h, wd * WORD), dtype=jnp.uint8)
-    for i in range(8):
+    for i in range(np_):
         bits = ((planes[..., i, :, :, None] >> shifts) & 1).astype(jnp.uint8)
         state = state | (bits.reshape(*lead, h, wd * WORD) << i)
     return state

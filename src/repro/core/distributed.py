@@ -43,7 +43,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import bitplane, prng
+from repro.core import prng, rulespec
 
 Axes = Union[str, Tuple[str, ...]]
 
@@ -129,9 +129,16 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                          batched: bool = False,
                          steps_per_launch: int | None = None,
                          block_rows: int = 0, block_words: int = 0,
-                         static_solid: bool = False):
-    """Build ``step(planes, t) -> planes`` advancing ``depth`` global FHP
+                         static_solid: bool = False,
+                         variant: str = "fhp2"):
+    """Build ``step(planes, t) -> planes`` advancing ``depth`` global CA
     steps per halo exchange under ``shard_map``.
+
+    ``variant`` names the registered rule (``core.rulespec``): the plane
+    stack is ``(..., spec.n_planes, H, Wd)`` and both the Pallas and the
+    jnp-fallback local updates run that rule's streaming stencil and
+    collision circuit.  Every tap honours the one-row/one-word halo
+    contract, so the exchange machinery is rule-agnostic.
 
     ``use_pallas`` runs the local update with the fused Pallas kernel in
     extended-shard mode for any ``depth``: the kernel's RNG / parity
@@ -160,6 +167,11 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
     (e.g. ``lax.fori_loop`` over exchanges) and jit the whole program.
     """
     assert 1 <= depth <= 31, "x halo is one 32-node word -> depth <= 31"
+    rule = rulespec.get_rule(variant)
+    assert not static_solid or rule.solid_plane is not None, \
+        f"rule {variant!r} has no solid plane: static_solid unavailable"
+    assert p_force == 0.0 or rule.force is not None, \
+        f"rule {variant!r} has no force pass: p_force must be 0"
     spec = lattice_spec(y_axes, x_axis, batched=batched)
     ny, nx = _mesh_size(mesh, y_axes), _mesh_size(mesh, x_axis)
 
@@ -187,7 +199,8 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                                hg=ny * hl, wdg=nx * wdl,
                                steps_per_launch=steps_per_launch,
                                block_rows=block_rows,
-                               block_words=block_words, solid_ext=solid_ext)
+                               block_words=block_words, solid_ext=solid_ext,
+                               variant=variant)
             return out[..., d:d + hl, 1:1 + wdl]
 
         if static_solid:
@@ -205,17 +218,19 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
         row0 = iy * hl - d  # parity offset (global H is even; sign-safe)
 
         def one(s, tt):
-            chi = prng.word_u32_at(rows, cols, tt, salt=0x11)
+            chi = (prng.word_u32_at(rows, cols, tt, salt=0x11)
+                   if rule.needs_rng else None)
             acc = (prng.bernoulli_words_at(rows, cols, tt, p_force)
                    if p_force > 0 else None)
-            return bitplane.step_planes(s, tt, y0=row0, chi=chi, accel=acc)
+            return rulespec.step_planes_rule(s, tt, rule, y0=row0,
+                                             chi=chi, accel=acc)
 
         if d == 1:
             ext = one(ext, t)
         else:
             ext = lax.fori_loop(0, d, lambda j, s: one(s, t + j), ext)
         if static_solid:
-            ext = ext[..., :7, :, :]
+            ext = ext[..., :rule.n_planes - 1, :, :]
         return ext[..., d:d + hl, 1:1 + wdl]
 
     if static_solid:
@@ -236,6 +251,7 @@ def make_run(mesh, steps: int, **kw):
     initial conditions, not the obstacles)."""
     depth = kw.get("depth", 1)
     static_solid = kw.get("static_solid", False)
+    sp = rulespec.get_rule(kw.get("variant", "fhp2")).solid_plane
     assert steps % depth == 0, (steps, depth)
     stepper = make_sharded_stepper(mesh, **kw)
 
@@ -252,8 +268,8 @@ def make_run(mesh, steps: int, **kw):
     batched = kw.get("batched", False)
 
     def run(planes, t0):
-        dyn = planes[..., :7, :, :]
-        solid = planes[..., 7, :, :]
+        dyn = planes[..., :sp, :, :]
+        solid = planes[..., sp, :, :]
         if batched:
             solid = solid[0]          # lanes share the geometry
         solid_ext = cache(solid)      # one exchange per geometry
@@ -262,18 +278,19 @@ def make_run(mesh, steps: int, **kw):
             return stepper(s, solid_ext, t0 + i * depth)
 
         dyn = lax.fori_loop(0, steps // depth, body, dyn)
-        return jnp.concatenate([dyn, planes[..., 7:, :, :]], axis=-3)
+        return jnp.concatenate([dyn, planes[..., sp:, :, :]], axis=-3)
 
     return run
 
 
 def make_gspmd_run(mesh, steps: int, *, y_axes: Axes = ("data",),
                    x_axis: str = "model", p_force: float = 0.0,
-                   batched: bool = False):
+                   batched: bool = False, variant: str = "fhp2"):
     """Baseline distribution: the *global* stepper under jit + sharding
     constraints; GSPMD materialises the halo traffic as collective-permutes
     of the roll/shift edge slices.  Used as the §Perf baseline against the
     explicit shard_map/ppermute scheme above."""
+    rule = rulespec.get_rule(variant)
     spec = lattice_spec(y_axes, x_axis, batched=batched)
     sharding = NamedSharding(mesh, spec)
 
@@ -281,7 +298,7 @@ def make_gspmd_run(mesh, steps: int, *, y_axes: Axes = ("data",),
         planes = lax.with_sharding_constraint(planes, sharding)
 
         def body(i, s):
-            s = bitplane.step_planes(s, t0 + i, p_force=p_force)
+            s = rulespec.step_planes_rule(s, t0 + i, rule, p_force=p_force)
             return lax.with_sharding_constraint(s, sharding)
 
         return lax.fori_loop(0, steps, body, planes)

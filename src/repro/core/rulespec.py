@@ -1,0 +1,337 @@
+"""Pluggable bit-sliced CA rule specs: one blocked substrate, many automata.
+
+The paper's parallelization machinery -- bit-plane packing, fused
+stream+collide launches, tiled word-halo aprons, temporal blocking,
+counter-based RNG -- is rule-agnostic; only the collision circuit and the
+streaming stencil are FHP-specific.  A :class:`RuleSpec` captures exactly
+that per-rule residue:
+
+* ``n_planes``     -- how many bit planes one node carries;
+* ``taps``         -- the streaming stencil: which plane moves where, with
+                      the row-parity-dependent x offsets of the triangular
+                      lattice (``|dx| <= 1``, ``|dy| <= 1``, so every rule
+                      honours the kernel's one-row/one-word-per-step halo
+                      contract);
+* ``collide``      -- the pointwise boolean collision pass over the
+                      streamed taps (for FHP, generated from
+                      ``core.rules`` -- the same table that builds the
+                      LUT; for BML, the two alternating deterministic
+                      sub-steps selected by the step parity);
+* ``needs_rng``    -- whether the circuit consumes chirality bits (the
+                      kernel skips the in-kernel hash entirely when not);
+* ``n_substeps``   -- the sub-step schedule length (BML alternates 2);
+* ``solid_plane``  -- index of the static geometry plane, or None for
+                      rules without obstacles (gates static-solid mode);
+* ``force``        -- the optional body-force pass (FHP only).
+
+Registered rules: ``fhp2``, ``fhp3`` (8 planes, RNG, solid plane 7) and
+``bml`` (Biham--Middleton--Levine traffic: 2 planes, zero RNG, two
+alternating deterministic sub-steps -- east cars move on even t, north
+cars on odd t, a car advances iff its destination was empty before the
+sub-step).  Every spec also carries its *byte oracle*
+(``oracle_step``: one full update on a ``(H, W)`` uint8 array) and a
+seeded random initial-state builder (``init_bytes``) so the cross-rule
+conformance harness (``tests/test_rule_conformance.py``) is fully
+rule-parametric.
+
+``step_planes_rule`` / ``run_planes_rule`` are the generic periodic
+bit-plane reference steppers (the rule-parametric analogue of
+``bitplane.step_planes``); for the FHP specs they are bit-identical to
+``bitplane.step_planes`` (conformance-tested), and ``core.distributed``
+uses them as its jnp fallback for every rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boolean, prng, rules
+
+_U8 = jnp.uint8
+
+
+@dataclasses.dataclass(frozen=True)
+class Tap:
+    """One streaming read: ``plane`` moves by ``offsets[parity]``.
+
+    ``offsets`` is ``((dx_even, dy), (dx_odd, dy))`` -- the
+    row-parity-dependent neighbour offsets of the triangular-lattice
+    mapping (``rules.OFFSETS``); square-lattice rules use equal pairs.
+    The kernel's halo contract requires ``|dx| <= 1`` and ``|dy| <= 1``
+    (one apron row / word per side per fused step).
+    """
+
+    plane: int
+    offsets: Tuple[Tuple[int, int], Tuple[int, int]]
+
+    def __post_init__(self):
+        (dx0, dy0), (dx1, dy1) = self.offsets
+        assert dy0 == dy1, "the y offset may not depend on row parity"
+        assert all(abs(d) <= 1 for d in (dx0, dx1, dy0)), self.offsets
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSpec:
+    """A complete bit-sliced CA rule (see module docstring).
+
+    ``collide(streamed, chi, t)`` maps the streamed tap list (one array
+    per tap, in ``taps`` order) to the ``n_planes`` output planes; it
+    must be pointwise boolean (representation-agnostic: packed uint32
+    words or {0,1} arrays).  ``chi`` is None when ``needs_rng`` is
+    False; ``t`` is the (possibly traced) global step counter -- the
+    sub-step schedule selects on ``t % n_substeps``.
+
+    ``mass_planes`` are the planes whose popcount sum is the conserved
+    particle count; ``per_plane_conserved`` claims each mass plane's
+    count is *separately* conserved (BML: cars never change species).
+    """
+
+    name: str
+    n_planes: int
+    taps: Tuple[Tap, ...]
+    collide: Callable[[Sequence[jnp.ndarray], Optional[jnp.ndarray], object],
+                      List[jnp.ndarray]]
+    needs_rng: bool
+    oracle_step: Callable[..., jnp.ndarray]
+    init_bytes: Callable[[int, int, float, int], np.ndarray]
+    n_substeps: int = 1
+    solid_plane: Optional[int] = None
+    force: Optional[Callable] = None
+    conserves_mass: bool = True
+    conserves_momentum: bool = False
+    mass_planes: Tuple[int, ...] = ()
+    per_plane_conserved: bool = False
+
+    def __post_init__(self):
+        assert self.n_planes >= 1
+        for tap in self.taps:
+            assert 0 <= tap.plane < self.n_planes, tap
+        if self.solid_plane is not None:
+            # static-solid mode strips the *last* plane from the stack
+            assert self.solid_plane == self.n_planes - 1, \
+                "the solid plane must be the last plane (static-solid layout)"
+
+    def byte_mask(self) -> int:
+        """Mask of the state bits this rule uses in the byte encoding."""
+        return (1 << self.n_planes) - 1
+
+
+_REGISTRY: Dict[str, RuleSpec] = {}
+
+
+def register_rule(spec: RuleSpec) -> RuleSpec:
+    assert spec.name not in _REGISTRY, spec.name
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_rule(name: str) -> RuleSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown rule {name!r}; "
+                         f"registered: {sorted(_REGISTRY)}") from None
+
+
+def rule_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# FHP-II / FHP-III: the paper's lattice gases on the pluggable substrate.
+# ---------------------------------------------------------------------------
+
+def _fhp_taps() -> Tuple[Tap, ...]:
+    taps = [Tap(k, rules.OFFSETS[k]) for k in range(rules.N_DIR)]
+    stay = ((0, 0), (0, 0))
+    taps.append(Tap(rules.REST_BIT, stay))
+    taps.append(Tap(rules.SOLID_BIT, stay))
+    return tuple(taps)
+
+
+def _fhp_spec(variant: str) -> RuleSpec:
+    def collide(streamed, chi, t):
+        return boolean.collide_planes(streamed, chi, variant)
+
+    def oracle_step(state, t, chi=None):
+        from repro.core import byte_step
+        return byte_step.step_bytes(state, t, chi=chi, variant=variant)
+
+    def init_bytes(h, w, density, seed):
+        # Bit-identical to the historic Scenario fill (7 bits at density).
+        rng = np.random.default_rng(seed)
+        occ = (rng.random((7, h, w)) < density).astype(np.uint8)
+        state = np.zeros((h, w), dtype=np.uint8)
+        for i in range(7):
+            state |= occ[i] << i
+        return state
+
+    return RuleSpec(
+        name=variant, n_planes=8, taps=_fhp_taps(), collide=collide,
+        needs_rng=True, oracle_step=oracle_step, init_bytes=init_bytes,
+        n_substeps=1, solid_plane=rules.SOLID_BIT,
+        force=boolean.force_planes,
+        conserves_mass=True, conserves_momentum=True,
+        mass_planes=tuple(range(7)), per_plane_conserved=False)
+
+
+# ---------------------------------------------------------------------------
+# BML traffic (Biham--Middleton--Levine): two planes, two alternating
+# deterministic sub-steps, zero RNG.  Plane 0 = east-bound cars, plane 1
+# = north-bound cars (row index increases northward, matching FHP's CY).
+# ---------------------------------------------------------------------------
+
+# Tap order for the collision circuit below.  To *read* the neighbour at
+# x+1 the tap moves the plane by dx=-1 (the kernel's streamed value at x
+# is the source at x-dx); likewise y+1 needs dy=-1.
+_BML_TAPS = (
+    Tap(0, ((1, 0), (1, 0))),      # E arriving from x-1
+    Tap(0, ((0, 0), (0, 0))),      # E in place
+    Tap(0, ((-1, 0), (-1, 0))),    # E at x+1  (east-bound occupancy ahead)
+    Tap(0, ((0, -1), (0, -1))),    # E at y+1  (north-bound occupancy ahead)
+    Tap(1, ((0, 0), (0, 0))),      # N in place
+    Tap(1, ((-1, 0), (-1, 0))),    # N at x+1
+    Tap(1, ((0, 1), (0, 1))),      # N arriving from y-1
+    Tap(1, ((0, -1), (0, -1))),    # N at y+1
+)
+
+
+def _bml_collide(streamed, chi, t):
+    """One BML sub-step: even t moves east cars, odd t moves north cars.
+
+    A car advances iff its destination cell was empty *before* the
+    sub-step (so a convoy opens up one cell per sub-step from the front);
+    the other species is frozen.  Pure boolean over the taps -- both
+    sub-step outcomes are computed and the (traced) step parity selects.
+    """
+    eW, e0, eE, eU, n0, nE, nS, nU = streamed
+    occ0 = e0 | n0                  # own cell, pre-move
+    occ_x1 = eE | nE                # cell at x+1, pre-move
+    occ_y1 = eU | nU                # cell at y+1, pre-move
+    new_e = (e0 & occ_x1) | (eW & ~occ0)
+    new_n = (n0 & occ_y1) | (nS & ~occ0)
+    east = (jnp.asarray(t, jnp.int32) % 2) == 0
+    return [jnp.where(east, new_e, e0), jnp.where(east, n0, new_n)]
+
+
+def bml_step_bytes(state: jnp.ndarray, t, chi=None) -> jnp.ndarray:
+    """Byte oracle for one BML sub-step on a (H, W) uint8 torus.
+
+    bit 0 = east-bound car, bit 1 = north-bound car; ``chi`` is accepted
+    (and ignored) for oracle-signature uniformity.
+    """
+    s = jnp.asarray(state, _U8)
+    e = (s & 1) != 0
+    n = (s & 2) != 0
+    occ = e | n
+    # east sub-step: E cars hop +x where the pre-move destination is empty
+    move_e = e & ~jnp.roll(occ, -1, axis=-1)
+    e_east = (e & ~move_e) | jnp.roll(move_e, 1, axis=-1)
+    # north sub-step: N cars hop +y
+    move_n = n & ~jnp.roll(occ, -1, axis=-2)
+    n_north = (n & ~move_n) | jnp.roll(move_n, 1, axis=-2)
+    east = (jnp.asarray(t, jnp.int32) % 2) == 0
+    e_out = jnp.where(east, e_east, e)
+    n_out = jnp.where(east, n, n_north)
+    return e_out.astype(_U8) | (n_out.astype(_U8) << 1)
+
+
+def bml_init_bytes(h: int, w: int, density: float, seed: int) -> np.ndarray:
+    """Seeded exclusive fill: each cell holds one east car (prob rho/2),
+    one north car (prob rho/2), or nothing -- the standard BML ensemble."""
+    rng = np.random.default_rng(seed)
+    u = rng.random((h, w))
+    return np.where(u < density / 2, np.uint8(1),
+                    np.where(u < density, np.uint8(2), np.uint8(0)))
+
+
+register_rule(_fhp_spec("fhp2"))
+register_rule(_fhp_spec("fhp3"))
+register_rule(RuleSpec(
+    name="bml", n_planes=2, taps=_BML_TAPS, collide=_bml_collide,
+    needs_rng=False, oracle_step=bml_step_bytes, init_bytes=bml_init_bytes,
+    n_substeps=2, solid_plane=None, force=None,
+    conserves_mass=True, conserves_momentum=False,
+    mass_planes=(0, 1), per_plane_conserved=True))
+
+
+# ---------------------------------------------------------------------------
+# Generic periodic bit-plane reference stepper (rule-parametric analogue
+# of ``bitplane.step_planes``; the jnp fallback of ``core.distributed``).
+# ---------------------------------------------------------------------------
+
+def stream_taps(planes: jnp.ndarray, taps: Sequence[Tap],
+                row0=0) -> List[jnp.ndarray]:
+    """Streamed tap values on packed planes (periodic both axes).
+
+    Mirrors the kernel's destination-centric convention: result[i] at
+    (y, x) is ``taps[i].plane`` at (y - dy, x - dx) with dx selected by
+    the *source* row parity (``row0`` = global row of local row 0)."""
+    from repro.core import bitplane
+    h = planes.shape[-2]
+    parity = ((jnp.arange(h, dtype=jnp.uint32)
+               + jnp.asarray(row0, jnp.uint32)) & 1)[:, None]
+    even = parity == 0
+    out = []
+    for tap in taps:
+        p = planes[..., tap.plane, :, :]
+        (dx0, dy), (dx1, _) = tap.offsets
+        if dx0 == dx1:
+            moved = bitplane.shift_x(p, dx0)
+        else:
+            moved = jnp.where(even, bitplane.shift_x(p, dx0),
+                              bitplane.shift_x(p, dx1))
+        out.append(jnp.roll(moved, dy, axis=-2) if dy else moved)
+    return out
+
+
+def step_planes_rule(planes: jnp.ndarray, t, spec: RuleSpec,
+                     p_force: float = 0.0, y0: int = 0, xw0: int = 0, *,
+                     chi=None, accel=None) -> jnp.ndarray:
+    """One fused update of ``spec`` on packed ``(..., n_planes, H, Wd)``
+    planes -- stream the taps, run the collision circuit, apply the
+    optional force pass.  For the FHP specs this is bit-identical to
+    ``bitplane.step_planes`` (conformance-tested)."""
+    assert planes.shape[-3] == spec.n_planes, \
+        (planes.shape, spec.name, spec.n_planes)
+    shape_words = planes.shape[-2:]
+    streamed = stream_taps(planes, spec.taps, row0=y0)
+    if spec.needs_rng and chi is None:
+        chi = prng.chirality_words(shape_words, t, y0=y0, xw0=xw0)
+    out = spec.collide(streamed, chi if spec.needs_rng else None, t)
+    if p_force or accel is not None:
+        assert spec.force is not None, \
+            f"rule {spec.name!r} has no force pass"
+        if accel is None:
+            accel = prng.bernoulli_words(shape_words, t, p_force,
+                                         y0=y0, xw0=xw0)
+        out = spec.force(out, accel)
+    return jnp.stack(out, axis=-3)
+
+
+def run_planes_rule(planes: jnp.ndarray, steps: int, spec: RuleSpec,
+                    p_force: float = 0.0, t0: int = 0) -> jnp.ndarray:
+    import jax
+    def body(i, s):
+        return step_planes_rule(s, t0 + i, spec, p_force)
+    return jax.lax.fori_loop(0, int(steps), body, planes)
+
+
+def oracle_run(state, steps: int, spec: RuleSpec, t0: int = 0):
+    """Advance the byte oracle ``steps`` steps, drawing the *word-RNG*
+    chirality stream (expanded to bytes) for rules that need it -- so the
+    oracle is bit-comparable with the packed/Pallas paths at any T."""
+    s = jnp.asarray(state)
+    h, w = s.shape[-2:]
+    for k in range(int(steps)):
+        chi = None
+        if spec.needs_rng:
+            chi_w = prng.chirality_words((h, w // 32), t0 + k)
+            shifts = jnp.arange(32, dtype=jnp.uint32)
+            chi = ((chi_w[..., None] >> shifts) & 1).astype(_U8)
+            chi = chi.reshape(h, w)
+        s = spec.oracle_step(s, t0 + k, chi=chi)
+    return s

@@ -111,6 +111,31 @@ per round while the pre-extended solid tile is cached per shard
 not once per round.  All lanes of a batched launch share the one solid
 operand (geometry is ensemble-invariant; diversity enters through the
 initial conditions).
+
+Rule plugins (``variant`` -> ``core.rulespec``): the kernel itself is
+rule-agnostic.  ``variant`` names a registered :class:`RuleSpec`, and
+everything FHP-specific above is really the spec's contract:
+
+* ``spec.n_planes`` sizes the plane stack (8 for FHP, 2 for BML) and
+  every VMEM/HBM model in ``ops.py``;
+* ``spec.taps`` drive the streaming loop -- each tap is one
+  ``(plane, ((dx_even, dy), (dx_odd, dy)))`` read with ``|dx|, |dy| <=
+  1``, which is exactly the one-row/one-word-per-side-per-step budget
+  the T-row/T-word halo aprons were sized for, so temporal and 2-D
+  blocking work unchanged for every rule;
+* ``spec.collide(streamed, chi, t)`` is the pointwise boolean collision
+  pass over the streamed taps; ``t`` is traced, so multi-sub-step rules
+  (BML's alternating east/north moves) select on ``t % n_substeps``
+  inside one fused launch;
+* ``spec.needs_rng`` gates the in-kernel hash: RNG-free rules skip the
+  chirality computation entirely (and accept any ``rng_in_kernel``);
+* ``spec.solid_plane`` (must be the last plane) gates static-solid
+  mode; ``spec.force`` gates the forcing pass.
+
+Adding an automaton = registering a spec in ``core.rulespec``; the
+cross-rule conformance harness (``tests/test_rule_conformance.py``)
+then sweeps it against its byte oracle over T x block_words x
+periodic/extended x batched with zero new kernel code.
 """
 from __future__ import annotations
 
@@ -121,7 +146,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import boolean, rules
+from repro.core import rulespec
 
 WORD = 32
 _U32 = jnp.uint32
@@ -196,32 +221,39 @@ def _bernoulli_words(rows, cols, t, pq: int, salt: int) -> jnp.ndarray:
 
 
 def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
-                pq: int, rng_in_kernel: bool, variant: str,
+                pq: int, rng_in_kernel: bool, spec,
                 chi_pre=None, acc_pre=None, solid=None,
                 shrink_x: bool = False) -> jnp.ndarray:
     """One stream->collide(->force) update of an extended row stack.
 
-    ``cur`` is ``(8, n, w)`` -- or ``(7, n, w)`` dynamic planes when the
-    static ``solid`` interior ``(n-2, w or w-2)`` is passed separately --
-    and the result keeps the plane count while shrinking to the interior
-    ``n-2`` rows (each step consumes one apron row per side) and, with
-    ``shrink_x`` (the 2-D blocked tile), the interior ``w-2`` words (each
-    step also consumes one apron word per side, dropping the words whose
-    ``_roll_x`` carry bit wrapped inside the tile).
+    ``cur`` is ``(n_planes, n, w)`` -- or ``(n_planes - 1, n, w)``
+    dynamic planes when the static ``solid`` interior ``(n-2, w or w-2)``
+    is passed separately -- and the result keeps the plane count while
+    shrinking to the interior ``n-2`` rows (each step consumes one apron
+    row per side) and, with ``shrink_x`` (the 2-D blocked tile), the
+    interior ``w-2`` words (each step also consumes one apron word per
+    side, dropping the words whose ``_roll_x`` carry bit wrapped inside
+    the tile).
     ``rows_abs`` is the ``(n, 1)`` int32 array of RNG/parity row
     coordinates of ``cur``'s rows, ``cols_abs`` the ``(1, w)`` int32
     array of RNG word coordinates (global offsets applied, periodic wrap
-    already reduced).
+    already reduced).  ``spec`` is the ``core.rulespec.RuleSpec`` whose
+    taps drive the streaming stencil and whose circuit collides.
     """
     n, w = cur.shape[1], cur.shape[2]
     xs = slice(1, w - 1) if shrink_x else slice(0, w)
     even = (rows_abs % 2) == 0
 
-    # --- stream (paper's "motion", Listing 1) -------------------------------
+    # --- stream (paper's "motion", Listing 1), tap by tap -------------------
     streamed: List[jnp.ndarray] = []
-    for k in range(rules.N_DIR):
-        src = cur[k]
-        (dx0, dy), (dx1, _dy1) = rules.OFFSETS[k]
+    for tap in spec.taps:
+        if solid is not None and tap.plane == spec.solid_plane:
+            # geometry is static: read the read-only solid operand (already
+            # sliced to the current interior) instead of the stack
+            streamed.append(solid)
+            continue
+        src = cur[tap.plane]
+        (dx0, dy), (dx1, _dy1) = tap.offsets
         if dx0 == dx1:
             moved = _shift_x(src, dx0)
         else:
@@ -229,30 +261,30 @@ def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
         # Destination-centric: interior row r (cur row r+1) receives from the
         # source cur row r + 1 - dy; parity above was that of the source row.
         streamed.append(moved[1 - dy:n - 1 - dy, xs])
-    streamed.append(cur[rules.REST_BIT, 1:n - 1, xs])   # rest particles stay
-    # geometry is static: from the stack, or the read-only solid operand
-    streamed.append(solid if solid is not None
-                    else cur[rules.SOLID_BIT, 1:n - 1, xs])
 
-    # --- collide (paper's LUT scattering, as boolean algebra) ---------------
+    # --- collide (the rule's boolean circuit; FHP: LUT-equivalent algebra) --
     tt = jnp.asarray(t, _U32)
-    if rng_in_kernel:
+    chi = None
+    if rng_in_kernel and (spec.needs_rng or pq > 0):
         rows_blk = rows_abs[1:n - 1].astype(_U32)
         cols_blk = cols_abs[:, xs].astype(_U32)
-        chi = _word_u32(rows_blk, cols_blk, tt, salt=0x11)
-    else:
-        chi = chi_pre
-    planes = boolean.collide_planes(streamed, chi, variant)
+    if spec.needs_rng:
+        chi = (_word_u32(rows_blk, cols_blk, tt, salt=0x11)
+               if rng_in_kernel else chi_pre)
+    planes = spec.collide(streamed, chi, t)
 
     # --- force (momentum injection with probability p) ----------------------
     if pq > 0:
+        assert spec.force is not None, \
+            f"rule {spec.name!r} has no force pass"
         if rng_in_kernel:
             acc = _bernoulli_words(rows_blk, cols_blk, tt, pq, salt=0x22)
         else:
             acc = acc_pre
-        planes = boolean.force_planes(planes, acc)
+        planes = spec.force(planes, acc)
     # static mode: the solid plane stays in its operand, not the stack
-    return jnp.stack(planes[:7] if solid is not None else planes)
+    return jnp.stack(planes[:spec.n_planes - 1] if solid is not None
+                     else planes)
 
 
 def fhp_kernel(s_ref, *rest,
@@ -281,10 +313,12 @@ def fhp_kernel(s_ref, *rest,
     shard's stream; the periodic-mode local reduction ``y0 + local mod h``
     cannot express that.
 
-    ``static_solid`` selects the 7-dynamic-plane layout (module
-    docstring): the plane refs carry [moving x6, rest]; the solid band is
-    assembled from its own views once and sliced per unrolled step.
+    ``static_solid`` selects the dynamic-plane layout (module
+    docstring): the plane refs carry every plane but the rule's solid
+    plane; the solid band is assembled from its own views once and
+    sliced per unrolled step.
     """
+    spec = rulespec.get_rule(variant)
     x_blocked = bw < wd
     nv = 9 if x_blocked else 3
     plane_refs = rest[:nv]
@@ -359,12 +393,13 @@ def fhp_kernel(s_ref, *rest,
                   solid_band[s + 1:s + n - 1]
         else:
             sol = None
-        if rng_in_kernel:
+        if rng_in_kernel or not spec.needs_rng:
             cur = _fused_step(cur, rows_abs, cols_abs, t0 + s, pq,
-                              True, variant, solid=sol, shrink_x=x_blocked)
+                              rng_in_kernel, spec, solid=sol,
+                              shrink_x=x_blocked)
         else:
             cur = _fused_step(cur, rows_abs, cols_abs, t0 + s, pq, False,
-                              variant, chi_pre=extra_refs[0][...],
+                              spec, chi_pre=extra_refs[0][...],
                               acc_pre=extra_refs[-1][...] if pq > 0 else None,
                               solid=sol, shrink_x=x_blocked)
 
@@ -391,6 +426,7 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
     multi-tile grids would read tile i-1 after step i-1's writeback (see
     module docstring).
     """
+    spec = rulespec.get_rule(variant)
     bw = bw or wd
     x_blocked = bw < wd
     assert h % bh == 0, f"H={h} must be a multiple of block_rows={bh}"
@@ -407,9 +443,11 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
         "(multi-tile in-place update is a read-after-write hazard)"
     assert rng_in_kernel or not static_solid, \
         "static_solid is a fused-path feature: rng_in_kernel=True"
+    assert not static_solid or spec.solid_plane is not None, \
+        f"rule {variant!r} has no solid plane: static_solid unsupported"
     nb = h // bh
     nbx = wd // bw
-    np_ = 7 if static_solid else 8
+    np_ = spec.n_planes - 1 if static_solid else spec.n_planes
 
     def yidx(dy):
         if dy == 0:
@@ -446,7 +484,7 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
         sband = lambda fy, fx: pl.BlockSpec(
             (bh, bw), lambda b, i, j, fy=fy, fx=fx: (fy(i), fx(j)))
         in_specs += [sband(yidx(dy), xidx(dx)) for dy, dx in hood]
-    if not rng_in_kernel:
+    if not rng_in_kernel and spec.needs_rng:
         in_specs.append(
             pl.BlockSpec((bh, bw), lambda b, i, j: (i, j)))            # chi
         if pq > 0:

@@ -44,7 +44,7 @@ MAX_STEPS_PER_LAUNCH = 8
 
 
 def vmem_bytes(bh: int, wd: int, steps: int = 1, block_words: int = 0,
-               static_solid: bool = False) -> int:
+               static_solid: bool = False, n_planes: int = 8) -> int:
     """Estimated VMEM working set of one program instance.
 
     Resident input views + 1 output tile (3 + 1 row bands when x is
@@ -54,16 +54,20 @@ def vmem_bytes(bh: int, wd: int, steps: int = 1, block_words: int = 0,
     words when x is blocked).  ``static_solid`` adds the read-only
     pre-extended solid operand: its own resident views plus the assembled
     solid band -- without it the autotuner could admit a tile that
-    overflows the budget on the 7-plane static path.
+    overflows the budget on the 7-plane static path.  ``n_planes`` is the
+    rule's plane count (``core.rulespec``): fewer planes per node mean a
+    proportionally smaller working set, so e.g. 2-plane BML admits far
+    taller bands than 8-plane FHP.
     """
     bw = min(block_words, wd) if block_words else wd
     x_blocked = bw < wd
-    np_ = 7 if static_solid else 8
+    np_ = n_planes - 1 if static_solid else n_planes
     views = 9 if x_blocked else 3
     ew = bw + 2 * steps if x_blocked else bw
     band = np_ * bh * bw * 4
     ext = np_ * (bh + 2 * steps) * ew * 4     # current plane stack
-    temps = 24 * (bh + 2 * steps) * ew * 4    # collision conditions + streams
+    # collision conditions + streams scale with the plane count (~3x)
+    temps = 3 * n_planes * (bh + 2 * steps) * ew * 4
     total = (views + 1) * band + ext + temps
     if static_solid:
         total += views * bh * bw * 4 + (bh + 2 * steps) * ew * 4
@@ -71,13 +75,13 @@ def vmem_bytes(bh: int, wd: int, steps: int = 1, block_words: int = 0,
 
 
 def _pick_bh(wd: int, steps: int, h: int | None, block_words: int = 0,
-             static_solid: bool = False) -> int:
+             static_solid: bool = False, n_planes: int = 8) -> int:
     """Largest power-of-two band height (<=32) that admits the
     ``steps``-row halo, fits VMEM, and (when ``h`` is given) divides H."""
     def ok(bh):
         return ((h is None or h % bh == 0)
-                and vmem_bytes(bh, wd, steps, block_words,
-                               static_solid) <= VMEM_BUDGET_BYTES)
+                and vmem_bytes(bh, wd, steps, block_words, static_solid,
+                               n_planes) <= VMEM_BUDGET_BYTES)
     bh = 32
     while bh > steps and not ok(bh):
         bh //= 2
@@ -88,28 +92,32 @@ def _pick_bh(wd: int, steps: int, h: int | None, block_words: int = 0,
     return bh
 
 
-def pick_block_rows(h: int, wd: int, steps: int = 1) -> int:
+def pick_block_rows(h: int, wd: int, steps: int = 1,
+                    n_planes: int = 8) -> int:
     """Largest power-of-two band height (<=32) that divides H, admits the
     ``steps``-row halo, and fits VMEM."""
-    return _pick_bh(wd, steps, h)
+    return _pick_bh(wd, steps, h, n_planes=n_planes)
 
 
-def pick_block_rows_extended(wd: int, steps: int = 1) -> int:
+def pick_block_rows_extended(wd: int, steps: int = 1,
+                             n_planes: int = 8) -> int:
     """``pick_block_rows`` without the divisibility constraint: the
     extended-shard path row-pads the array to a block multiple (pad rows
     sit past the validity region)."""
-    return _pick_bh(wd, steps, None)
+    return _pick_bh(wd, steps, None, n_planes=n_planes)
 
 
 def pick_tile_extended(wd: int, steps: int = 1,
-                       static_solid: bool = False) -> Tuple[int, int]:
+                       static_solid: bool = False,
+                       n_planes: int = 8) -> Tuple[int, int]:
     """``(block_rows, block_words)`` for the extended path: the legacy
     full-width 1-D band when it fits VMEM, else the widest power-of-two
     word block that admits the ``steps``-word x apron and fits (the
     extended path word-pads the array to a block multiple, so ``bw`` need
     not divide the width)."""
     try:
-        return _pick_bh(wd, steps, None, static_solid=static_solid), wd
+        return _pick_bh(wd, steps, None, static_solid=static_solid,
+                        n_planes=n_planes), wd
     except ValueError:
         pass
     bw = 1
@@ -118,7 +126,8 @@ def pick_tile_extended(wd: int, steps: int = 1,
     while bw >= max(steps, 1):
         try:
             return _pick_bh(wd, steps, None, block_words=bw,
-                            static_solid=static_solid), bw
+                            static_solid=static_solid,
+                            n_planes=n_planes), bw
         except ValueError:
             bw //= 2
     raise ValueError(f"no valid 2-D tile for Wd={wd}, "
@@ -149,26 +158,28 @@ def launch_cost(bh: int, steps: int, block_words: int = 0,
 
 
 def hbm_bytes_per_site(bh: int, steps: int, block_words: int = 0,
-                       width_words: int = 0) -> float:
-    """Modeled HBM traffic per site update for the fused T-step kernel."""
+                       width_words: int = 0, n_planes: int = 8) -> float:
+    """Modeled HBM traffic per site update for the fused T-step kernel.
+    ``n_planes`` scales the per-word byte cost (per-rule plane count)."""
     bw = (min(block_words, width_words) if block_words and width_words
           else block_words) or width_words or 1
     x_blocked = bool(block_words and width_words and
                      block_words < width_words)
     hx = steps if x_blocked else 0
-    return (8 * 4 * ((bh + 2 * steps) * (bw + 2 * hx) + bh * bw)
+    return (n_planes * 4 * ((bh + 2 * steps) * (bw + 2 * hx) + bh * bw)
             / (32.0 * bh * bw * steps))
 
 
 def sharded_hbm_bytes_per_site(bh: int, steps: int, depth: int,
                                hl: int, wdl: int,
                                static_solid: bool = False,
-                               block_words: int = 0) -> float:
+                               block_words: int = 0,
+                               n_planes: int = 8) -> float:
     """Modeled HBM traffic per useful site update of the sharded
     extended-shard path (``roofline.analysis.sharded_fhp_traffic``)."""
     return _roofline.sharded_fhp_traffic(
         hl, wdl, depth=depth, T=steps, block_rows=bh,
-        block_words=block_words,
+        block_words=block_words, n_planes=n_planes,
         static_solid=static_solid)["hbm_bytes_per_site_step"]
 
 
@@ -176,6 +187,7 @@ def sharded_launch_cost(bh: int, steps: int, depth: int,
                         hl: int, wdl: int, *,
                         static_solid: bool = False,
                         block_words: int = 0,
+                        n_planes: int = 8,
                         exchange_latency_s: float | None = None) -> float:
     """Modeled seconds per useful site update for the sharded path: HBM +
     weighted apron compute (incl. the x-apron redundancy of a 2-D tile) +
@@ -188,7 +200,7 @@ def sharded_launch_cost(bh: int, steps: int, depth: int,
         exchange_latency_s = _roofline.measured_exchange_latency()
     return _roofline.sharded_fhp_traffic(
         hl, wdl, depth=depth, T=steps, block_rows=bh,
-        block_words=block_words,
+        block_words=block_words, n_planes=n_planes,
         compute_row_weight=COMPUTE_ROW_WEIGHT,
         exchange_latency_s=exchange_latency_s,
         static_solid=static_solid)["total_s_per_site"]
@@ -213,6 +225,7 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
                     vmem_budget: int = VMEM_BUDGET_BYTES,
                     max_depth: int | None = None,
                     static_solid: bool = False,
+                    n_planes: int = 8,
                     exchange_latency_s: float | None = None):
     """Choose the launch configuration minimizing modeled cost under the
     VMEM budget -- the joint 2-D tile search.
@@ -235,8 +248,11 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
     one-word x halo (depth <= 31).  ``block_words`` here is a tile of
     the *extended* width ``wdl + 2``.
 
-    ``static_solid`` prices the 7-dynamic-plane schedule (cached solid
-    apron + read-only solid operand in the VMEM model);
+    ``static_solid`` prices the dynamic-plane schedule (cached solid
+    apron + read-only solid operand in the VMEM model); ``n_planes`` is
+    the rule's plane count (``core.rulespec``) -- it scales both the
+    VMEM working set and the modeled HBM/ICI bytes, so low-plane rules
+    (BML) admit taller tiles at the same budget.
     ``exchange_latency_s=None`` resolves to the measured ppermute latency
     (constant fallback off-mesh) -- only for the sharded search, whose
     cost model is the only consumer.
@@ -251,7 +267,8 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
                 if h % bh == 0:
                     t_cap = min(bh, max_steps, bw if x_blocked else bh)
                     for steps in range(1, t_cap + 1):
-                        if vmem_bytes(bh, wd, steps, bw) > vmem_budget:
+                        if vmem_bytes(bh, wd, steps, bw,
+                                      n_planes=n_planes) > vmem_budget:
                             break
                         cost = launch_cost(bh, steps, bw, wd)
                         if best_cost is None or cost < best_cost:
@@ -275,12 +292,13 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
                 t_cap = min(bh, max_steps, depth,
                             bw if x_blocked else bh)
                 for steps in range(1, t_cap + 1):
-                    if vmem_bytes(bh, we, steps, bw,
-                                  static_solid) > vmem_budget:
+                    if vmem_bytes(bh, we, steps, bw, static_solid,
+                                  n_planes) > vmem_budget:
                         break
                     cost = sharded_launch_cost(
                         bh, steps, depth, hl, wdl,
                         static_solid=static_solid, block_words=bw,
+                        n_planes=n_planes,
                         exchange_latency_s=exchange_latency_s)
                     if best_cost is None or cost < best_cost:
                         best, best_cost = (bh, bw, steps, depth), cost
@@ -330,16 +348,24 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
     each program owns a ``(block_rows, block_words)`` tile with a
     ``steps_per_launch``-word x apron; ``block_words`` must divide ``Wd``
     (``run_extended`` word-pads before calling)."""
+    from repro.core import rulespec
+    spec = rulespec.get_rule(variant)
     squeeze = planes.ndim == 3
     if squeeze:
         planes = planes[None]
     b, np_, h, wd = planes.shape
     static_solid = solid is not None
-    if planes.shape[-3] != (7 if static_solid else 8):
-        raise ValueError(f"plane stack has {np_} planes; expected "
-                         f"{'7 dynamic (solid passed separately)' if static_solid else '8'}")
+    want = spec.n_planes - 1 if static_solid else spec.n_planes
+    if np_ != want:
+        raise ValueError(
+            f"plane stack has {np_} planes; rule {variant!r} expects "
+            f"{want}{' dynamic (solid passed separately)' if static_solid else ''}")
+    if static_solid and spec.solid_plane is None:
+        raise ValueError(f"rule {variant!r} has no solid plane")
     if static_solid and solid.shape != (h, wd):
         raise ValueError(f"solid plane {solid.shape} != lattice {(h, wd)}")
+    if p_force > 0 and spec.force is None:
+        raise ValueError(f"rule {variant!r} has no force pass: p_force=0")
     T = steps_per_launch
     if T != 1 and not rng_in_kernel:
         raise ValueError("steps_per_launch > 1 requires rng_in_kernel=True "
@@ -356,8 +382,10 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
     elif donate:
         raise ValueError("donate=True needs extended mode (periodic band "
                          "maps re-read written bands)")
-    bh = block_rows or (pick_block_rows_extended(wd, steps=T) if extended
-                        else pick_block_rows(h, wd, steps=T))
+    bh = block_rows or (
+        pick_block_rows_extended(wd, steps=T, n_planes=spec.n_planes)
+        if extended
+        else pick_block_rows(h, wd, steps=T, n_planes=spec.n_planes))
     bw = block_words or wd
     if T > bh:
         raise ValueError(f"steps_per_launch={T} > block_rows={bh}")
@@ -387,7 +415,7 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
     args = [scalars] + [planes] * nv
     if static_solid:
         args += [solid] * nv
-    if not rng_in_kernel:
+    if not rng_in_kernel and spec.needs_rng:
         args.append(prng.chirality_words((h, wd), t, y0=y0, xw0=xw0))
         if pq > 0:
             args.append(prng.bernoulli_words((h, wd), t, p_force,
@@ -450,6 +478,8 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
     leftward -- it never crosses the outer halo word the validity
     contract already drops).  Auto keeps the legacy full-width 1-D band
     when it fits VMEM and splits x otherwise (``pick_tile_extended``)."""
+    from repro.core import rulespec
+    n_planes = rulespec.get_rule(kw.get("variant", "fhp2")).n_planes
     steps = int(steps)
     T = int(steps_per_launch or min(steps, MAX_STEPS_PER_LAUNCH))
     he, wde = ext.shape[-2], ext.shape[-1]
@@ -463,11 +493,13 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
             bw = wde          # legacy callers: explicit rows, full width
         else:
             bh_auto, bw = pick_tile_extended(wde, steps=min(T, steps),
-                                             static_solid=static_solid)
+                                             static_solid=static_solid,
+                                             n_planes=n_planes)
             bh = min(cap, bh_auto)
     elif not bh:
         bh = min(cap, _pick_bh(wde, min(T, steps), None, block_words=bw,
-                               static_solid=static_solid))
+                               static_solid=static_solid,
+                               n_planes=n_planes))
     bw = min(bw, wde)
     pad = (-he) % bh
     padw = (-wde) % bw

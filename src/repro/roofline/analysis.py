@@ -324,7 +324,8 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
                         compute_row_weight: float = 0.2,
                         exchange_latency_s: float = EXCHANGE_LATENCY_S,
                         hw: HW = V5E,
-                        static_solid: bool = False) -> Dict[str, float]:
+                        static_solid: bool = False,
+                        n_planes: int = 8) -> Dict[str, float]:
     """Modeled per-site-step costs of the sharded Pallas hot path.
 
     Returns a dict with ``hbm_bytes_per_site_step`` (the headline number:
@@ -346,8 +347,15 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
     every round moves the 7 *dynamic* planes over ICI -- a 7/8 cut of the
     plane term -- while each launch writes 7 planes back to HBM instead
     of 8 (reads stay at 8: the kernel still consumes the solid band).
+
+    ``n_planes`` is the rule's plane count (``core.rulespec``): bytes
+    per word-cell scale linearly with it, so e.g. 2-plane BML moves a
+    quarter of FHP's HBM and exchange bytes per site-step.  The default
+    8 reproduces the historic FHP numbers exactly.
     """
     assert 1 <= T <= block_rows and 1 <= depth, (T, block_rows, depth)
+    plane_bytes = 4 * n_planes
+    dyn_plane_bytes = 4 * (n_planes - 1)
     we = wdl + 2                               # extended width in words
     bw = min(block_words, we) if block_words else we
     x_blocked = bw < we
@@ -360,8 +368,8 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
     # Launch schedule: full T-step launches plus one rem-step tail launch.
     ts = [T] * (depth // T) + ([depth % T] if depth % T else [])
     sites = float(hl * wdl * WORD_NODES)       # useful sites per shard step
-    write_pb = DYN_PLANE_BYTES if static_solid else PLANE_BYTES
-    xchg_pb = DYN_PLANE_BYTES if static_solid else PLANE_BYTES
+    write_pb = dyn_plane_bytes if static_solid else plane_bytes
+    xchg_pb = dyn_plane_bytes if static_solid else plane_bytes
 
     # HBM: per launch, every tile reads (bh + 2*Tj) x (bw + 2*Tj_x) cells
     # (all 8 planes -- the solid band rides in either layout) and the
@@ -370,7 +378,7 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
         return nb * nbx * (block_rows + 2 * tj) * (
             bw + (2 * tj if x_blocked else 0))
 
-    hbm_b = (sum(PLANE_BYTES * read_cells(tj) + write_pb * he_p * we_p
+    hbm_b = (sum(plane_bytes * read_cells(tj) + write_pb * he_p * we_p
                  for tj in ts)
              / (sites * depth))
 
@@ -380,7 +388,7 @@ def sharded_fhp_traffic(hl: int, wdl: int, *, depth: int, T: int,
     comp_cells = sum(nb * nbx * (block_rows + 2 * (tj - s - 1))
                      * (bw + (2 * (tj - s - 1) if x_blocked else 0))
                      for tj in ts for s in range(tj))
-    comp_b = (compute_row_weight * PLANE_BYTES * comp_cells
+    comp_b = (compute_row_weight * plane_bytes * comp_cells
               / (sites * depth))
 
     # ICI: per exchange each shard sends depth rows up + depth rows down of

@@ -18,7 +18,6 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core import rules
 from repro.geometry import Geometry, raster
 
 
@@ -54,22 +53,33 @@ class Scenario:
         """Global packed (H, W//32) uint32 solid plane."""
         return raster.pack_mask(self.solid_mask())
 
+    def rule(self):
+        """The registered :class:`repro.core.rulespec.RuleSpec` of
+        ``variant``."""
+        from repro.core import rulespec
+        return rulespec.get_rule(self.variant)
+
     def initial_bytes(self) -> np.ndarray:
-        """(H, W) uint8 byte-per-node state: seeded random fluid at
-        ``density`` per moving bit, geometry nodes solid (and empty --
-        the no-slip mechanism populates their perimeter dynamically)."""
-        rng = np.random.default_rng(self.seed)
-        occ = (rng.random((7, self.height, self.width))
-               < self.density).astype(np.uint8)
-        state = np.zeros((self.height, self.width), dtype=np.uint8)
-        for i in range(7):
-            state |= occ[i] << i
-        return np.where(self.solid_mask(), np.uint8(rules.SOLID_MASK),
-                        state)
+        """(H, W) uint8 byte-per-node state: the rule's seeded random
+        fill (``RuleSpec.init_bytes``) at ``density``; for rules with a
+        solid plane, geometry nodes are solid (and empty -- the no-slip
+        mechanism populates their perimeter dynamically).  Rules without
+        a solid plane (e.g. BML) require an empty geometry."""
+        spec = self.rule()
+        state = spec.init_bytes(self.height, self.width, self.density,
+                                self.seed)
+        mask = self.solid_mask()
+        if spec.solid_plane is None:
+            assert not mask.any(), \
+                f"rule {self.variant!r} has no solid plane but scenario " \
+                f"{self.name!r} has obstacle geometry"
+            return state
+        return np.where(mask, np.uint8(1 << spec.solid_plane), state)
 
     def initial_planes(self):
-        """Packed (8, H, W//32) uint32 bit-plane stack (jnp array)."""
+        """Packed (n_planes, H, W//32) uint32 bit-plane stack (jnp)."""
         import jax.numpy as jnp
 
         from repro.core import bitplane
-        return bitplane.pack(jnp.asarray(self.initial_bytes()))
+        return bitplane.pack(jnp.asarray(self.initial_bytes()),
+                             n_planes=self.rule().n_planes)

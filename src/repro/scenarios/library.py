@@ -8,8 +8,8 @@ sizes.  All geometry rasterizes in global coordinates (shard-exact).
 """
 from __future__ import annotations
 
-from repro.geometry import (Disk, ObstacleArray, PorousMedium, Rectangle,
-                            channel_walls)
+from repro.geometry import (Disk, Empty, ObstacleArray, PorousMedium,
+                            Rectangle, channel_walls)
 from repro.scenarios.base import Scenario
 from repro.scenarios.registry import register
 
@@ -82,6 +82,22 @@ def cavity(height: int = 64, width: int = 256, density: float = 0.2,
         name="cavity", height=height, width=width, geometry=box,
         density=density, p_force=p_force, seed=seed,
         description="closed box, body-forced recirculation")
+
+
+@register("bml_city")
+def bml_city(height: int = 128, width: int = 128, density: float = 0.3,
+             seed: int = 6) -> Scenario:
+    """Biham--Middleton--Levine traffic on an obstacle-free square torus:
+    east and north cars at ``density`` total (rho/2 each species).  The
+    headline observable is ``observables.jam_fraction`` -- below the
+    critical density cars self-organize into free flow (jam fraction
+    -> 0); above it a global jam forms.  ``variant="bml"`` routes every
+    stepping path through the 2-plane deterministic rule (no RNG, no
+    solid plane, no forcing)."""
+    return Scenario(
+        name="bml_city", height=height, width=width, geometry=Empty(),
+        density=density, p_force=0.0, seed=seed, variant="bml",
+        description="BML traffic torus: jam/free-flow phase transition")
 
 
 @register("cylinder_array")

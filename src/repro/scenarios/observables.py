@@ -82,6 +82,35 @@ def coarse_velocity(planes: jnp.ndarray, tile_rows: int = 8,
     return jnp.stack([ux, uy], axis=-1)
 
 
+def car_counts(planes: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(east, north) car counts of a packed 2-plane BML state; each is
+    separately conserved (cars never change species or vanish)."""
+    dt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    e = jax.lax.population_count(planes[..., 0, :, :]).sum(
+        axis=(-2, -1), dtype=dt)
+    n = jax.lax.population_count(planes[..., 1, :, :]).sum(
+        axis=(-2, -1), dtype=dt)
+    return e, n
+
+
+def jam_fraction(planes: jnp.ndarray, t) -> jnp.ndarray:
+    """Fraction of the about-to-move BML species blocked at step ``t``
+    (destination occupied pre-move): the jam/free-flow order parameter.
+    0 = free flow, -> 1 as a global jam locks the torus."""
+    e = planes[..., 0, :, :]
+    n = planes[..., 1, :, :]
+    occ = e | n
+    east = (jnp.asarray(t, jnp.int32) % 2) == 0
+    movers = jnp.where(east, e, n)
+    ahead = jnp.where(east, bitplane.shift_x(occ, -1),
+                      jnp.roll(occ, -1, axis=-2))
+    blocked = jax.lax.population_count(movers & ahead).sum(
+        axis=(-2, -1), dtype=jnp.int32).astype(jnp.float32)
+    total = jax.lax.population_count(movers).sum(
+        axis=(-2, -1), dtype=jnp.int32).astype(jnp.float32)
+    return blocked / jnp.maximum(total, 1.0)
+
+
 def obstacle_report(planes: jnp.ndarray, scenario) -> dict:
     """Per-obstacle momentum transfer for a Scenario's named obstacles:
     {name: (px2, py)} as plain ints (single-lane states)."""

@@ -15,7 +15,7 @@ _TIER1_MODULES = {
     "test_rules", "test_prng", "test_roofline", "test_propagation",
     "test_substrate", "test_fhp3", "test_equivalence", "test_kernels",
     "test_temporal", "test_sharded_pallas", "test_geometry",
-    "test_scenarios", "test_xblock",
+    "test_scenarios", "test_xblock", "test_rule_conformance",
 }
 
 

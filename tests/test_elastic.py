@@ -75,3 +75,63 @@ def test_elastic_mesh_rescale():
                             "HOME": "/root"})
     assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
     assert "ELASTIC_OK" in r.stdout
+
+
+CA_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding
+    from repro import checkpoint as ckpt
+    from repro.core import bitplane, distributed, rulespec
+
+    name, H, W = "fhp3", 32, 256
+    spec = rulespec.get_rule(name)
+    planes = bitplane.pack(jnp.asarray(spec.init_bytes(H, W, 0.3, 9)),
+                           n_planes=spec.n_planes)
+
+    def run_on(mesh, p, t0, steps, variant):
+        sh = NamedSharding(mesh, distributed.lattice_spec(("data",), "model"))
+        run = jax.jit(distributed.make_run(
+            mesh, steps, y_axes=("data",), x_axis="model", depth=2,
+            use_pallas=True, steps_per_launch=2, variant=variant))
+        return run(jax.device_put(p, sh), t0)
+
+    # mesh A advances to t=4, checkpoints with the rule name in metadata
+    mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+    mid = run_on(mesh_a, planes, 0, 4, name)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 4, {"planes": mid}, meta={"rule": name, "t": 4})
+        step = ckpt.latest_step(d)
+        meta = ckpt.load_meta(d, step)
+        assert meta == {"rule": name, "t": 4}, meta
+
+        # "cluster reshapes": restore onto a 2x4 mesh, continue under the
+        # rule named by the checkpoint
+        mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+        sh_b = NamedSharding(mesh_b,
+                             distributed.lattice_spec(("data",), "model"))
+        restored = ckpt.restore(d, step, {"planes": mid}, {"planes": sh_b})
+        pb = restored["planes"]
+        assert pb.sharding.mesh.devices.shape == (2, 4)
+        out = run_on(mesh_b, pb, meta["t"], 4, meta["rule"])
+
+    # == 8 uninterrupted single-device steps, bit-exact
+    want = rulespec.run_planes_rule(planes, 8, spec)
+    assert bool((out == want).all())
+    print("CA_ELASTIC_OK")
+""")
+
+
+@pytest.mark.slow
+def test_ca_checkpoint_rule_roundtrip():
+    """A CA checkpoint carries its rule name in the manifest metadata, so
+    a restarted ensemble replays bit-exactly under the right rule even
+    after an elastic mesh reshape (counter-based RNG: resume at the saved
+    ``t`` reproduces the uninterrupted stream)."""
+    r = subprocess.run([sys.executable, "-c", CA_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "CA_ELASTIC_OK" in r.stdout

@@ -1,4 +1,5 @@
-"""FHP-II rule table: exhaustive conservation + hypothesis properties."""
+"""FHP rule tables: exhaustive conservation + hypothesis properties,
+plus the registry-wide audits (every rule in ``core.rulespec``)."""
 import numpy as np
 import pytest
 try:
@@ -86,3 +87,82 @@ def test_lut_flat_consistency(s):
     lut = rules.build_lut()
     assert flat[s] == lut[0, s]
     assert flat[256 + s] == lut[1, s]
+
+
+# ---------------------------------------------------------------------------
+# Registry-wide audits: every rule in ``core.rulespec``.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 255))
+def test_bounce_back_involution(s):
+    """``bounce_back`` reverses every moving particle (i -> i+3), leaves
+    rest/solid bits alone, and is its own inverse."""
+    o = rules.bounce_back(s)
+    assert rules.bounce_back(o) == s
+    assert (o & ~rules.MOVING_MASK) == (s & ~rules.MOVING_MASK)
+    px, py = rules.momentum_of(s)
+    assert rules.momentum_of(o) == (-px, -py)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 1))
+def test_fhp3_conservation_property(s, chi):
+    """FHP-III's richer table honours the same conservation laws as
+    FHP-II (the exhaustive tests above pin the fhp2 default)."""
+    lut = rules.build_lut("fhp3")
+    o = int(lut[chi, s])
+    assert rules.mass_of(o & 0x7F) == rules.mass_of(s & 0x7F)
+    if s & rules.SOLID_MASK:
+        px, py = rules.momentum_of(s)
+        assert rules.momentum_of(o) == (-px, -py)
+    else:
+        assert rules.momentum_of(o) == rules.momentum_of(s)
+
+
+def test_boolean_circuit_matches_lut_all_states():
+    """The generated boolean circuit == the LUT on all 512 (state, chi)
+    combos, for every FHP variant -- the contract that lets the Pallas
+    kernel run pure vector algebra in place of the byte gather."""
+    import jax.numpy as jnp
+
+    from repro.core import bitplane, boolean
+    # 512 cells: row-major (chi, s) on a (16, 32) lattice, one word/row
+    s_all = np.arange(512, dtype=np.uint16).reshape(16, 32)
+    state = (s_all & 0xFF).astype(np.uint8)
+    chi_bits = (s_all >> 8).astype(np.uint8)
+    planes = bitplane.pack(jnp.asarray(state))
+    chi = bitplane.pack_bits_from_bytes(jnp.asarray(chi_bits))
+    for variant in ("fhp2", "fhp3"):
+        lut = rules.build_lut(variant)
+        out = boolean.collide_planes(
+            [planes[k] for k in range(8)], chi, variant)
+        got = np.asarray(bitplane.unpack(jnp.stack(out)))
+        want = lut[chi_bits.astype(np.int64), state.astype(np.int64)]
+        assert (got == want).all(), variant
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_registry_rules_conserve_claimed_mass(seed):
+    """Every registered rule's collision circuit conserves its claimed
+    mass planes pointwise on random 8-bit states (one stepper step on a
+    tiny torus; streaming is a permutation, so any leak is the circuit's)."""
+    import jax.numpy as jnp
+
+    from repro.core import bitplane, rulespec
+    rng = np.random.default_rng(seed)
+    for name in rulespec.rule_names():
+        spec = rulespec.get_rule(name)
+        state = (rng.integers(0, 256, (4, 32), dtype=np.uint8)
+                 & spec.byte_mask())
+        planes = bitplane.pack(jnp.asarray(state), n_planes=spec.n_planes)
+        out = rulespec.step_planes_rule(planes, int(seed) % 4, spec)
+
+        def mass(p):
+            import jax
+            return sum(int(jax.lax.population_count(
+                p[..., i, :, :]).sum()) for i in spec.mass_planes)
+
+        if spec.conserves_mass:
+            assert mass(out) == mass(planes), name

@@ -24,7 +24,7 @@ import numpy as np
 import pytest
 
 from repro import scenarios
-from repro.core import bitplane
+from repro.core import bitplane, rulespec
 from repro.kernels.fhp_step.ops import fhp_step_pallas, run_extended
 from repro.scenarios import observables
 
@@ -52,14 +52,23 @@ def test_registry_has_scenario_suite():
 def test_scenarios_build_and_scale():
     for name in scenarios.names():
         sc = scenarios.get(name, **TINY)
+        spec = sc.rule()
         assert sc.height == TINY["height"] and sc.width == TINY["width"]
         planes = sc.initial_planes()
-        assert planes.shape == (8, sc.height, sc.width // 32)
-        # the packed solid plane is exactly the rasterized geometry
-        assert (np.asarray(planes[7]) == sc.solid_plane()).all()
-        # solid nodes carry no particles initially
-        assert int(observables.solid_momentum(planes, planes[7])[0]) == 0
-        assert int(observables.mass(planes)) > 0
+        assert planes.shape == (spec.n_planes, sc.height, sc.width // 32)
+        if spec.solid_plane is not None:
+            sp = spec.solid_plane
+            # the packed solid plane is exactly the rasterized geometry
+            assert (np.asarray(planes[sp]) == sc.solid_plane()).all()
+            # solid nodes carry no particles initially
+            assert int(observables.solid_momentum(planes, planes[sp])[0]) == 0
+        else:
+            # solid-free rules may not carry obstacle geometry
+            assert not sc.solid_plane().any(), name
+        mass = sum(
+            int(np.unpackbits(np.asarray(planes[i]).view(np.uint8)).sum())
+            for i in spec.mass_planes)
+        assert mass > 0, name
 
 
 def test_scenario_states_are_seeded():
@@ -80,14 +89,24 @@ def test_unknown_scenario_raises():
 # ---------------------------------------------------------------------------
 
 def test_scenario_smoke_sweep_mass_conservation():
+    def counts(spec, p):
+        return [int(np.unpackbits(np.asarray(p[i]).view(np.uint8)).sum())
+                for i in spec.mass_planes]
+
     for name in scenarios.names():
         sc = scenarios.get(name, **TINY)
+        spec = sc.rule()
         planes = sc.initial_planes()
-        m0 = int(observables.mass(planes))
-        out = bitplane.run_planes(planes, 4, p_force=sc.p_force)
-        assert observables.mass_audit(out, m0), name
-        # geometry is invariant under the update
-        assert bool((out[7] == planes[7]).all()), name
+        c0 = counts(spec, planes)
+        out = rulespec.run_planes_rule(planes, 4, spec, p_force=sc.p_force)
+        if spec.per_plane_conserved:
+            assert counts(spec, out) == c0, name
+        else:
+            assert sum(counts(spec, out)) == sum(c0), name
+        if spec.solid_plane is not None:
+            # geometry is invariant under the update
+            sp = spec.solid_plane
+            assert bool((out[sp] == planes[sp]).all()), name
 
 
 # ---------------------------------------------------------------------------

@@ -275,3 +275,48 @@ def test_sharded_pallas_matches_single_device():
                             "HOME": "/root"})
     assert r.returncode == 0, r.stdout + r.stderr
     assert "ALL_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Rule-parametric sharding: non-default rules through the full mesh path.
+# ---------------------------------------------------------------------------
+
+RULE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from repro.core import bitplane, distributed, rulespec
+
+    failures = []
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    sh = NamedSharding(mesh, distributed.lattice_spec(("data",), "model"))
+    for name, steps, depth, T in [("fhp3", 4, 2, 2), ("bml", 4, 2, 2)]:
+        spec = rulespec.get_rule(name)
+        state = spec.init_bytes(16, 128, 0.3, 5)
+        p = bitplane.pack(jnp.asarray(state), n_planes=spec.n_planes)
+        ref = rulespec.run_planes_rule(p, steps, spec)
+        pd = jax.device_put(p, sh)
+        run = jax.jit(distributed.make_run(
+            mesh, steps, y_axes=("data",), x_axis="model", depth=depth,
+            use_pallas=True, steps_per_launch=T, variant=name))
+        ok = bool((run(pd, 0) == ref).all())
+        print(f"{name} sharded pallas depth={depth} T={T}: {ok}")
+        if not ok:
+            failures.append(name)
+
+    assert not failures, failures
+    print("ALL_OK")
+""")
+
+
+def test_sharded_pallas_rule_variants():
+    """fhp3 and bml over the 2x2-mesh shard_map + ppermute path must be
+    bit-identical to the single-device rule stepper (tier-1: the rule
+    threading through ``distributed`` is load-bearing for every rule)."""
+    r = subprocess.run([sys.executable, "-c", RULE_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL_OK" in r.stdout
