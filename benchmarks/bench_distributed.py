@@ -1,13 +1,21 @@
 """Sharded temporal-blocking sweep: the distributed FHP hot path as a
-function of halo depth d, in-kernel steps-per-launch T, and local-update
-implementation (fused Pallas extended-shard kernel vs jnp), on a
-host-platform mesh of 4 fake devices (2x2 over ("data", "model")).
+function of halo depth d, in-kernel steps-per-launch T, local-update
+implementation (fused Pallas extended-shard kernel vs jnp), and
+compute/communication ``overlap`` (interior/boundary split vs serial),
+on a host-platform mesh of 4 fake devices (2x2 over ("data", "model")).
 
-Wall-clock here is only meaningful on a real multi-chip backend (on CPU
-the Pallas kernel interprets and ppermute is a memcpy); the durable
-output is the *model* columns persisted to BENCH_kernel.json -- modeled
-HBM bytes/site/step of the extended-shard launches, exchange count and
-ICI bytes per step -- plus the joint (block_rows, T, depth) point the
+Every Pallas config is timed as an overlap on/off **pair** at the same
+``(lattice, mesh, T, depth)`` (``--smoke`` pairs only the ``T == depth``
+configs to hold the time budget), recording the measured ratio
+``overlap_speedup_measured`` next to the model's
+``overlap_speedup_modeled``.  Wall-clock here is only meaningful on a
+real multi-chip backend (on CPU the Pallas kernel interprets and
+ppermute is a memcpy, so the launches serialize and the measured ratio
+shows split *overhead* only); the durable output is the *model* columns
+persisted to BENCH_kernel.json -- modeled HBM bytes/site/step of the
+extended-shard launches, exchange count and ICI bytes per step, the
+overlap round time ``max(t_exchange, t_interior) + t_boundary`` -- plus
+the joint (block_rows, block_words, T, depth, overlap) point the
 autotuner picks.  The sweep runs in a subprocess so the fake-device
 XLA_FLAGS never leak into the parent (benchmarks/run.py may already have
 initialised jax on the real topology).
@@ -61,29 +69,47 @@ SCRIPT = textwrap.dedent("""
         for use_pallas, impl in ((False, "jnp-sharded"),
                                  (True, "pallas-sharded")):
             for T in (t_sweep if use_pallas else [1]):
-                kw = dict(y_axes=("data",), x_axis="model", p_force=0.01,
-                          depth=depth, use_pallas=use_pallas)
-                if use_pallas:
-                    kw["steps_per_launch"] = T
-                run = jax.jit(distributed.make_run(mesh, steps, **kw))
-                dt = timed(run)
-                rec = {"bench": "distributed", "impl": impl,
-                       "backend": jax.default_backend(), "mesh": [2, 2],
-                       "depth": depth, "T": T, "B": 1,
-                       "sites_per_sec": h * w * steps / dt,
-                       "steps": steps, "lattice": [h, w], "smoke": smoke,
-                       "structural": False,
-                       "model_exchanges_per_step": 1.0 / depth}
-                if use_pallas:
-                    bh = pick_block_rows_extended(wdl + 2, steps=T)
-                    m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T,
-                                            block_rows=bh)
-                    rec.update(
-                        block_rows=bh,
-                        model_hbm_bytes_per_site=m["hbm_bytes_per_site_step"],
-                        model_ici_bytes_per_site=m["ici_bytes_per_site_step"],
-                        model_launches_per_step=m["launches_per_step"])
-                print("RECORD " + json.dumps(rec))
+                # Overlap on/off pairs at the same (lattice, mesh, T,
+                # depth): every Pallas config in full mode; --smoke pairs
+                # only T == depth to hold the time budget.
+                ovs = [False] + ([True] if use_pallas and
+                                 (not smoke or T == depth) else [])
+                dt_serial = None
+                for overlap in ovs:
+                    kw = dict(y_axes=("data",), x_axis="model",
+                              p_force=0.01, depth=depth,
+                              use_pallas=use_pallas)
+                    if use_pallas:
+                        kw["steps_per_launch"] = T
+                        kw["overlap"] = overlap
+                    run = jax.jit(distributed.make_run(mesh, steps, **kw))
+                    dt = timed(run)
+                    if not overlap:
+                        dt_serial = dt
+                    rec = {"bench": "distributed", "impl": impl,
+                           "backend": jax.default_backend(), "mesh": [2, 2],
+                           "depth": depth, "T": T, "B": 1,
+                           "overlap": overlap,
+                           "sites_per_sec": h * w * steps / dt,
+                           "steps": steps, "lattice": [h, w],
+                           "smoke": smoke, "structural": False,
+                           "model_exchanges_per_step": 1.0 / depth}
+                    if use_pallas:
+                        bh = pick_block_rows_extended(wdl + 2, steps=T)
+                        m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T,
+                                                block_rows=bh,
+                                                overlap=overlap)
+                        rec.update(
+                            block_rows=bh,
+                            model_hbm_bytes_per_site=m["hbm_bytes_per_site_step"],
+                            model_ici_bytes_per_site=m["ici_bytes_per_site_step"],
+                            model_launches_per_step=m["launches_per_step"],
+                            model_total_s_per_site=m["total_s_per_site"])
+                        if overlap:
+                            rec["overlap_speedup_modeled"] = \
+                                m["overlap_speedup_modeled"]
+                            rec["overlap_speedup_measured"] = dt_serial / dt
+                    print("RECORD " + json.dumps(rec))
     print("BENCH_DONE")
 """)
 
@@ -96,20 +122,25 @@ def _model_records(smoke: bool) -> List[Dict]:
     shards = [(256, 32)] if smoke else [(256, 32), (1024, 128), (8192, 2048)]
     out = []
     for hl, wdl in shards:
-        bh, bw, T, depth = autotune_launch(hl, wdl, max_depth=16)
+        bh, bw, T, depth, overlap = autotune_launch(hl, wdl, max_depth=16)
         m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T, block_rows=bh,
-                                block_words=bw)
+                                block_words=bw, overlap=overlap)
+        m_ov = sharded_fhp_traffic(hl, wdl, depth=depth, T=T, block_rows=bh,
+                                   block_words=bw, overlap=True)
         out.append({
             "bench": "distributed", "impl": "pallas-sharded",
             "backend": None, "shard": [hl, wdl], "block_rows": bh,
             "block_words": bw,
-            "T": T, "depth": depth, "B": 1, "sites_per_sec": None,
+            "T": T, "depth": depth, "B": 1, "overlap": overlap,
+            "sites_per_sec": None,
             "lattice": None, "smoke": smoke, "structural": True,
             "autotuned": True,
             "model_hbm_bytes_per_site": m["hbm_bytes_per_site_step"],
             "model_ici_bytes_per_site": m["ici_bytes_per_site_step"],
             "model_exchanges_per_step": m["exchanges_per_step"],
-            "model_launches_per_step": m["launches_per_step"]})
+            "model_launches_per_step": m["launches_per_step"],
+            "model_total_s_per_site": m["total_s_per_site"],
+            "overlap_speedup_modeled": m_ov["overlap_speedup_modeled"]})
     return out
 
 
@@ -120,9 +151,12 @@ def main(smoke: bool | None = None) -> List[Dict]:
     records = _model_records(smoke)
     for r in records:
         print(f"autotune(shard={r['shard']}),(bh={r['block_rows']} "
-              f"bw={r['block_words']} T={r['T']} d={r['depth']}),config")
+              f"bw={r['block_words']} T={r['T']} d={r['depth']} "
+              f"ov={int(r['overlap'])}),config")
         print(f"model_hbm_bytes_per_site(shard={r['shard']}),"
               f"{r['model_hbm_bytes_per_site']:.4f},B")
+        print(f"overlap_speedup_modeled(shard={r['shard']}),"
+              f"{r['overlap_speedup_modeled']:.4f},x")
     env = dict(os.environ)
     env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
     r = subprocess.run(
@@ -138,7 +172,8 @@ def main(smoke: bool | None = None) -> List[Dict]:
         if line.startswith("RECORD "):
             rec = json.loads(line[len("RECORD "):])
             records.append(rec)
-            print(f"{rec['impl']}_d{rec['depth']}_T{rec['T']}_sps,"
+            ov = "_ov" if rec.get("overlap") else ""
+            print(f"{rec['impl']}_d{rec['depth']}_T{rec['T']}{ov}_sps,"
                   f"{rec['sites_per_sec']:.3e},sites/s")
     return records
 

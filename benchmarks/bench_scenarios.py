@@ -134,8 +134,8 @@ def _model_records(smoke: bool) -> List[Dict]:
     shards = [(256, 32)] if smoke else [(256, 32), (1024, 128)]
     out = []
     for hl, wdl in shards:
-        bh, bw, T, depth = autotune_launch(hl, wdl, max_depth=16,
-                                           static_solid=True)
+        bh, bw, T, depth, _overlap = autotune_launch(hl, wdl, max_depth=16,
+                                                     static_solid=True)
         for static in (False, True):
             m = sharded_fhp_traffic(hl, wdl, depth=depth, T=T,
                                     block_rows=bh, block_words=bw,

@@ -19,7 +19,13 @@
 # gate: ``pytest -m rules`` is the cross-rule conformance sweep (every
 # registered rule vs its byte oracle over T x block_words x
 # periodic/extended x batched), and the JSON check asserts the BML
-# traffic scenario produced a timed record under the 2-plane rule.
+# traffic scenario produced a timed record under the 2-plane rule.  The
+# compute/communication-overlap gate: tier1 includes
+# tests/test_overlap.py (interior/boundary split bit-exactness incl.
+# degenerate fallbacks), and the JSON check asserts bench_distributed
+# emitted paired overlap on/off timed records at the same (lattice,
+# mesh, T, depth) -- measured ratio next to the modeled one -- plus the
+# headline ``overlap_speedup_modeled`` field.
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -37,5 +43,21 @@ assert any(r.get("xblock") == "2d" and r.get("sites_per_sec")
 assert any(r.get("scenario") == "bml_city" and r.get("rule") == "bml"
            and r.get("bit_exact") and r.get("sites_per_sec")
            for r in d["records"]), "no timed bml_city record"
-print("BENCH_kernel.json gate: headline + 2-D x-block + bml_city present")
+
+def key(r):
+    return (r.get("bench"), r.get("impl"), tuple(r.get("lattice") or ()),
+            tuple(r.get("mesh") or ()), r.get("T"), r.get("depth"))
+timed = [r for r in d["records"]
+         if not r.get("structural") and r.get("sites_per_sec")]
+on = {key(r) for r in timed if r.get("overlap")}
+off = {key(r) for r in timed if r.get("overlap") is False}
+pairs = on & off
+assert pairs, "no paired overlap on/off timed records"
+paired = [r for r in timed if r.get("overlap") and key(r) in pairs]
+assert all(r.get("overlap_speedup_modeled") is not None
+           and r.get("overlap_speedup_measured") is not None
+           for r in paired), "overlap pair missing modeled/measured ratio"
+assert hl.get("overlap_speedup_modeled"), "headline overlap ratio missing"
+print("BENCH_kernel.json gate: headline + 2-D x-block + bml_city + "
+      f"{len(pairs)} overlap pair(s) present")
 EOF

@@ -54,8 +54,16 @@ def _headline(records):
         top = max(rows, key=lambda r: r["sites_per_sec"])
         return {k: top.get(k) for k in _HEADLINE_KEYS if k in top}
 
+    # The modeled compute/communication-overlap ratio at the best
+    # overlapped sharded point (bench_distributed pairs every overlap=True
+    # record with its serial twin; the measured ratio sits on the record).
+    ov = [r for r in records if r.get("overlap")
+          and r.get("overlap_speedup_modeled") is not None]
+    ov_best = max((r["overlap_speedup_modeled"] for r in ov), default=None)
+
     return {"best_single_device": best(("kernel", "temporal")),
-            "best_sharded": best(("distributed", "scenarios"))}
+            "best_sharded": best(("distributed", "scenarios")),
+            "overlap_speedup_modeled": ov_best}
 
 
 def main(argv=None) -> None:

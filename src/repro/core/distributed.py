@@ -15,7 +15,10 @@ local steps per exchange, trading a little redundant compute at the seams
 for 1/d of the exchange *count* (latency-bound at scale).  The validity
 region of the extended array shrinks by one row and one lattice column per
 local step, so ``d`` rows of y-halo and one 32-node word of x-halo support
-any ``d <= 31``.
+any ``d <= 31``.  ``overlap=True`` additionally splits each round into an
+interior launch (apron-independent, overlaps the ``ppermute`` ring) plus
+thin boundary launches -- ``max(t_exchange, t_interior) + t_boundary``
+instead of the serial sum (see ``make_sharded_stepper``).
 
 Counter-based RNG makes every scheme bit-identical to the single-device
 reference: shards hash *global* (row, word, t) coordinates (mod the global
@@ -130,6 +133,7 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                          steps_per_launch: int | None = None,
                          block_rows: int = 0, block_words: int = 0,
                          static_solid: bool = False,
+                         overlap: bool = False,
                          variant: str = "fhp2"):
     """Build ``step(planes, t) -> planes`` advancing ``depth`` global CA
     steps per halo exchange under ``shard_map``.
@@ -157,6 +161,27 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
     stack (lanes replicated over the mesh, sharded in H/Wd like the
     unbatched case).
 
+    ``overlap`` (Pallas path only) runs each round through
+    ``ops.run_extended_split``: an **interior** launch on the bare shard
+    -- whose ``depth``-step light cone never touches the exchanged apron
+    -- plus four thin boundary launches (top/bottom row bands, left/right
+    word strips) that are the only consumers of the halo.  The split is
+    bit-exact vs the serial path by construction (exact-piece
+    composition; degenerate shards fall back to ``run_extended``), so
+    the scheduler is free to overlap: the interior launch depends only
+    on the previous round's composed shard, not on this round's
+    ``ppermute``, so compute and exchange proceed concurrently.  The
+    double-buffering falls out of the dataflow rather than explicit
+    buffer management: round k+1's halo slices (``planes[..., :d]``,
+    ``planes[..., -d:]``, the edge word columns) align exactly with the
+    boundary pieces of round k's composition, so XLA's slice-of-concat
+    folding sources the next exchange from the boundary launches' output
+    buffers directly -- the ring for round k+1 issues as soon as round
+    k's *boundary* launches land, hiding under round k+1's interior
+    compute.  (On the interpret-mode CPU backend the launches serialize,
+    so timed overlap numbers there measure split overhead only; see
+    EXPERIMENTS.md.)
+
     ``static_solid`` returns ``step(dyn, solid_ext, t) -> dyn`` instead:
     ``dyn`` is the (..., 7, H, Wd) *dynamic* plane stack and ``solid_ext``
     the cached extended solid tiles from ``make_solid_cache`` (same
@@ -167,6 +192,8 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
     (e.g. ``lax.fori_loop`` over exchanges) and jit the whole program.
     """
     assert 1 <= depth <= 31, "x halo is one 32-node word -> depth <= 31"
+    assert not overlap or use_pallas, \
+        "overlap splits Pallas launches: needs use_pallas=True"
     rule = rulespec.get_rule(variant)
     assert not static_solid or rule.solid_plane is not None, \
         f"rule {variant!r} has no solid plane: static_solid unavailable"
@@ -191,16 +218,18 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
         ext = _exchange_halo(planes, d, ny, nx, y_axes, x_axis)
 
         if use_pallas:
-            from repro.kernels.fhp_step.ops import run_extended
+            from repro.kernels.fhp_step.ops import (run_extended,
+                                                    run_extended_split)
+            advance = run_extended_split if overlap else run_extended
             # Global coordinates of ext element (0, 0) (the apron corner)
             # and the global extents the kernel's RNG reduces mod.
-            out = run_extended(ext, d, t0=t, p_force=p_force,
-                               y0=iy * hl - d, xw0=ix * wdl - 1,
-                               hg=ny * hl, wdg=nx * wdl,
-                               steps_per_launch=steps_per_launch,
-                               block_rows=block_rows,
-                               block_words=block_words, solid_ext=solid_ext,
-                               variant=variant)
+            out = advance(ext, d, t0=t, p_force=p_force,
+                          y0=iy * hl - d, xw0=ix * wdl - 1,
+                          hg=ny * hl, wdg=nx * wdl,
+                          steps_per_launch=steps_per_launch,
+                          block_rows=block_rows,
+                          block_words=block_words, solid_ext=solid_ext,
+                          variant=variant)
             return out[..., d:d + hl, 1:1 + wdl]
 
         if static_solid:

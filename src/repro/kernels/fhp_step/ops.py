@@ -9,11 +9,17 @@ multi-step kernel ``steps // T`` times (plus one ``steps % T``-step
 remainder launch).  ``run_extended`` is the shard-map hot path: it
 advances a halo-extended shard array ``depth`` steps in ceil(depth/T)
 donated launches with **global**-coordinate RNG (mod ``hg``/``wdg``), so
-one depth-``d`` exchange feeds ``d`` in-kernel steps.  ``autotune_launch``
+one depth-``d`` exchange feeds ``d`` in-kernel steps.
+``run_extended_split`` is the compute/communication-overlap variant: it
+advances the same extended shard as an **interior** launch (bare shard,
+no apron dependence) plus four thin **boundary** launches (top/bottom
+row bands, left/right word strips) whose light cones are the only ones
+that touch the exchanged halo, then composes the exact valid pieces --
+bit-identical to ``run_extended`` by construction.  ``autotune_launch``
 picks the 2-D tile ``(block_rows, block_words, steps_per_launch)`` -- or,
 given ``max_depth``, the joint ``(block_rows, block_words,
-steps_per_launch, depth)`` for the sharded path including the exchange
-bandwidth + latency terms -- under the VMEM budget from a
+steps_per_launch, depth, overlap)`` for the sharded path including the
+exchange bandwidth + latency terms -- under the VMEM budget from a
 bytes-per-site-update model; ``block_words`` below the width selects the
 x-blocked kernel grid that lifts the VMEM ceiling on wide shards.  On
 non-TPU backends the kernel runs in interpret mode.
@@ -41,6 +47,14 @@ VMEM_BUDGET_BYTES = 8 * 2 ** 20
 COMPUTE_ROW_WEIGHT = 0.2
 
 MAX_STEPS_PER_LAUNCH = 8
+
+
+def _pow2_ge(x: int) -> int:
+    """Smallest power of two >= x (>= 1)."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
 
 
 def vmem_bytes(bh: int, wd: int, steps: int = 1, block_words: int = 0,
@@ -188,10 +202,15 @@ def sharded_launch_cost(bh: int, steps: int, depth: int,
                         static_solid: bool = False,
                         block_words: int = 0,
                         n_planes: int = 8,
+                        overlap: bool = False,
                         exchange_latency_s: float | None = None) -> float:
     """Modeled seconds per useful site update for the sharded path: HBM +
     weighted apron compute (incl. the x-apron redundancy of a 2-D tile) +
-    exchange bandwidth + exchange latency.
+    exchange bandwidth + exchange latency.  ``overlap=True`` prices the
+    interior/boundary split of ``run_extended_split``: the exchange hides
+    under the interior launch, so the round costs ``max(t_exchange,
+    t_interior) + t_boundary`` instead of the serial sum (degenerate
+    shards price at the serial cost, like the runtime fallback).
 
     ``exchange_latency_s=None`` uses the measured ppermute round-trip
     latency when a real multi-chip mesh is attached, else the 3 us
@@ -203,7 +222,7 @@ def sharded_launch_cost(bh: int, steps: int, depth: int,
         block_words=block_words, n_planes=n_planes,
         compute_row_weight=COMPUTE_ROW_WEIGHT,
         exchange_latency_s=exchange_latency_s,
-        static_solid=static_solid)["total_s_per_site"]
+        static_solid=static_solid, overlap=overlap)["total_s_per_site"]
 
 
 def _bw_candidates(width: int, divisors_only: bool):
@@ -239,14 +258,19 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
 
     Sharded (``max_depth`` set): ``h``/``wd`` are the per-shard ``hl`` /
     ``wdl``; returns the joint ``(block_rows, block_words,
-    steps_per_launch, depth)`` minimizing ``sharded_launch_cost`` -- HBM
-    traffic of the extended array plus the exchange bandwidth and
+    steps_per_launch, depth, overlap)`` minimizing ``sharded_launch_cost``
+    -- HBM traffic of the extended array plus the exchange bandwidth and
     per-exchange latency terms, so deeper halos win exactly until apron
-    redundancy outgrows the amortised exchange cost.  The extended path
-    has no divisibility constraint (rows and words are padded), but the
-    T-row/T-word halo must fit the tile and the depth must fit the
-    one-word x halo (depth <= 31).  ``block_words`` here is a tile of
-    the *extended* width ``wdl + 2``.
+    redundancy outgrows the amortised exchange cost.  ``overlap`` (bool)
+    selects the interior/boundary split of ``run_extended_split``, which
+    hides the exchange under the interior launch at the price of the
+    split's extra per-slice aprons -- overlap shifts the optimal depth
+    because the exchange is then partially free, hence the joint search.
+    Ties prefer ``overlap=False`` (the serial path is the simpler plan).
+    The extended path has no divisibility constraint (rows and words are
+    padded), but the T-row/T-word halo must fit the tile and the depth
+    must fit the one-word x halo (depth <= 31).  ``block_words`` here is
+    a tile of the *extended* width ``wdl + 2``.
 
     ``static_solid`` prices the dynamic-plane schedule (cached solid
     apron + read-only solid operand in the VMEM model); ``n_planes`` is
@@ -295,13 +319,18 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
                     if vmem_bytes(bh, we, steps, bw, static_solid,
                                   n_planes) > vmem_budget:
                         break
-                    cost = sharded_launch_cost(
-                        bh, steps, depth, hl, wdl,
-                        static_solid=static_solid, block_words=bw,
-                        n_planes=n_planes,
-                        exchange_latency_s=exchange_latency_s)
-                    if best_cost is None or cost < best_cost:
-                        best, best_cost = (bh, bw, steps, depth), cost
+                    # The split's boundary launches cap the tile to each
+                    # slice's (smaller) footprint, so the serial VMEM
+                    # check above covers overlap=True as well.
+                    for overlap in (False, True):
+                        cost = sharded_launch_cost(
+                            bh, steps, depth, hl, wdl,
+                            static_solid=static_solid, block_words=bw,
+                            n_planes=n_planes, overlap=overlap,
+                            exchange_latency_s=exchange_latency_s)
+                        if best_cost is None or cost < best_cost:
+                            best, best_cost = (bh, bw, steps, depth,
+                                               overlap), cost
             bh //= 2
     if best is None:
         raise ValueError(f"no valid sharded launch config for "
@@ -500,6 +529,12 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
         bh = min(cap, _pick_bh(wde, min(T, steps), None, block_words=bw,
                                static_solid=static_solid,
                                n_planes=n_planes))
+    # Cap *explicit* tiles to the array footprint too: a tuner-chosen
+    # block_rows=32 on a thin boundary/remainder slice (e.g. the 3d-row
+    # bands of run_extended_split) would otherwise pad the slice up to a
+    # full tile -- wasted traffic -- while the cap keeps the launch
+    # single-tile so the input_output_aliases donation below still fires.
+    bh = min(bh, cap)
     bw = min(bw, wde)
     pad = (-he) % bh
     padw = (-wde) % bw
@@ -511,7 +546,9 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
         if pad or padw:
             solid_ext = jnp.pad(solid_ext, [(0, pad), (0, padw)])
     # In-place carry (input_output_aliases) is only race-free when one
-    # tile covers the lane: see kernel.make_fhp_step.
+    # tile covers the lane: see kernel.make_fhp_step.  The flag rides
+    # every launch below -- the full-T main loop *and* the steps % T
+    # remainder -- so a trailing short launch aliases its carry too.
     donate = bh == ext.shape[-2] and bw == ext.shape[-1]
     full, rem = divmod(steps, T)
     for j in range(full):
@@ -525,3 +562,82 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
                               block_words=bw, extended=True, hg=hg, wdg=wdg,
                               donate=donate, solid=solid_ext, **kw)
     return ext[..., :he, :wde]
+
+
+def run_extended_split(ext: jnp.ndarray, steps: int, *, t0=0,
+                       p_force: float = 0.0, y0=0, xw0=0, hg: int, wdg: int,
+                       steps_per_launch: int | None = None,
+                       block_rows: int = 0, block_words: int = 0,
+                       solid_ext: jnp.ndarray | None = None,
+                       **kw) -> jnp.ndarray:
+    """``run_extended`` split into an interior launch plus four thin
+    boundary launches, for compute/communication overlap in the sharded
+    stepper (``core.distributed``).  Bit-identical to ``run_extended``.
+
+    ``ext`` is the usual ``(..., He, Wde)`` halo-extended shard with
+    ``He = hl + 2*steps`` and ``Wde = wdl + 2``.  The **interior** launch
+    runs on the bare ``(hl, wdl)`` shard slice -- no halo row or word in
+    its footprint, so its dataflow is independent of the exchange that
+    produced the apron.  Four **boundary** launches cover the rest:
+
+    * top / bottom: ``3*steps``-row bands at full extended width (halo
+      rows + the ``2*steps`` shard rows whose light cone reaches them);
+      valid output = shard rows ``[0, d)`` / ``[hl - d, hl)``, all words;
+    * left / right: 3-word strips over shard rows ``[d, hl - d)`` (halo
+      word + edge word + one interior apron word; ``d <= 31`` column
+      shrink stays inside the outer words); valid output = shard word
+      ``0`` / ``wdl - 1``.
+
+    Every sub-call reuses ``run_extended`` on a slice with shifted global
+    ``y0``/``xw0`` -- the global-mod RNG/parity make apron compute
+    bit-exact at any offset, for every registered rule -- and the exact
+    valid pieces are concatenated back into the shard (pieces are
+    disjoint and exhaustive; no averaging, no halo writeback).  The
+    return value keeps ``run_extended``'s ext-shaped contract (rows
+    ``[steps, He - steps)`` x words ``[1, Wde - 1)`` valid); the restored
+    apron is zero.
+
+    Degenerate shards -- ``hl <= 2*steps`` (boundary bands cover the
+    whole shard) or ``wdl <= 2`` (no interior word) -- fall back to the
+    serial ``run_extended`` bit-exactly, mirroring the roofline model's
+    ``overlap_speedup_modeled == 1.0`` for those shapes.
+
+    ``block_rows``/``block_words`` are the tuner's tile for the interior
+    launch; the boundary slices inherit them and rely on ``run_extended``
+    capping the tile to each slice's footprint, which also keeps every
+    boundary launch single-tile so the ``input_output_aliases`` donation
+    fires on each (incl. their ``d % T`` remainder launches).
+
+    ``solid_ext`` slices exactly: the static-geometry cache holds the
+    *true* global solid over the whole extended tile, so each sub-slice
+    of it is that sub-lattice's correct pre-extended solid operand.
+    """
+    d = int(steps)
+    he, wde = ext.shape[-2], ext.shape[-1]
+    hl, wdl = he - 2 * d, wde - 2
+    run = functools.partial(
+        run_extended, t0=t0, p_force=p_force, hg=hg, wdg=wdg,
+        steps_per_launch=steps_per_launch, block_rows=block_rows,
+        block_words=block_words, **kw)
+    if hl <= 2 * d or wdl <= 2:
+        return run(ext, d, y0=y0, xw0=xw0, solid_ext=solid_ext)
+
+    def sub(rows, words, y_off, xw_off):
+        sl = ext[..., rows, words]
+        se = None if solid_ext is None else solid_ext[rows, words]
+        return run(sl, d, y0=y0 + y_off, xw0=xw0 + xw_off, solid_ext=se)
+
+    interior = sub(slice(d, he - d), slice(1, wde - 1), d, 1)
+    top = sub(slice(0, 3 * d), slice(None), 0, 0)
+    bot = sub(slice(he - 3 * d, he), slice(None), he - 3 * d, 0)
+    left = sub(slice(d, he - d), slice(0, 3), d, 0)
+    right = sub(slice(d, he - d), slice(wde - 3, wde), d, wde - 3)
+
+    mid = jnp.concatenate([left[..., d:hl - d, 1:2],
+                           interior[..., d:hl - d, 1:wdl - 1],
+                           right[..., d:hl - d, 1:2]], axis=-1)
+    shard = jnp.concatenate([top[..., d:2 * d, 1:wde - 1],
+                             mid,
+                             bot[..., d:2 * d, 1:wde - 1]], axis=-2)
+    widths = [(0, 0)] * (shard.ndim - 2) + [(d, d), (1, 1)]
+    return jnp.pad(shard, widths)

@@ -153,17 +153,18 @@ def test_measured_exchange_latency_constant_off_mesh():
             == autotune_launch(1024, 128, max_depth=16,
                                exchange_latency_s=lat))
     # a much larger latency must push the tuner at least as deep
-    _, _, _, d0 = autotune_launch(1024, 128, max_depth=16,
-                                  exchange_latency_s=lat)
-    _, _, _, d1 = autotune_launch(1024, 128, max_depth=16,
-                                  exchange_latency_s=100 * lat)
+    _, _, _, d0, _ = autotune_launch(1024, 128, max_depth=16,
+                                     exchange_latency_s=lat)
+    _, _, _, d1, _ = autotune_launch(1024, 128, max_depth=16,
+                                     exchange_latency_s=100 * lat)
     assert d1 >= d0
 
 
 def test_autotune_joint_sharded():
     for hl, wdl in [(256, 32), (1024, 128), (8192, 2048)]:
-        bh, bw, T, d = autotune_launch(hl, wdl, max_depth=16)
+        bh, bw, T, d, ov = autotune_launch(hl, wdl, max_depth=16)
         assert 1 <= T <= min(bh, d) and 1 <= d <= 31, (bh, bw, T, d)
+        assert isinstance(ov, bool)
         assert bw >= wdl + 2 or T <= bw, (bw, T)
         assert vmem_bytes(bh, wdl + 2, T, bw) <= VMEM_BUDGET_BYTES
         # The exchange-latency term must push the tuner to a deep halo,
@@ -172,7 +173,7 @@ def test_autotune_joint_sharded():
         assert sharded_hbm_bytes_per_site(bh, T, d, hl, wdl,
                                           block_words=bw) <= 0.6
     # depth can never exceed the shard rows (nearest-neighbour exchange)
-    bh, bw, T, d = autotune_launch(8, 32, max_depth=16)
+    bh, bw, T, d, ov = autotune_launch(8, 32, max_depth=16)
     assert d <= 8, d
     # single-device signature: the 2-D (block_rows, block_words, T) tile
     bh, bw, T = autotune_launch(1024, 128)
@@ -202,13 +203,15 @@ SCRIPT = textwrap.dedent("""
         for T in sorted({1, 2, depth}):
             if T > depth:
                 continue
-            run = jax.jit(distributed.make_run(
-                mesh, 8, y_axes=("data",), x_axis="model", p_force=0.03,
-                depth=depth, use_pallas=True, steps_per_launch=T))
-            ok = bool((run(pd, 0) == ref).all())
-            print(f"pallas depth={depth} T={T}: {ok}")
-            if not ok:
-                failures.append(("2x2", depth, T))
+            for overlap in (False, True):
+                run = jax.jit(distributed.make_run(
+                    mesh, 8, y_axes=("data",), x_axis="model", p_force=0.03,
+                    depth=depth, use_pallas=True, steps_per_launch=T,
+                    overlap=overlap))
+                ok = bool((run(pd, 0) == ref).all())
+                print(f"pallas depth={depth} T={T} overlap={overlap}: {ok}")
+                if not ok:
+                    failures.append(("2x2", depth, T, overlap))
 
     # 2-D (x x y) blocked tile through the full mesh path: block_words
     # below the extended shard width (wde = wdl + 2 = 6) forces the
@@ -245,14 +248,15 @@ SCRIPT = textwrap.dedent("""
     sh3 = NamedSharding(mesh3, distributed.lattice_spec(
         ("pod", "data"), "model"))
     pd3 = jax.device_put(p, sh3)
-    run3 = jax.jit(distributed.make_run(
-        mesh3, 4, y_axes=("pod", "data"), x_axis="model", p_force=0.03,
-        depth=2, use_pallas=True, steps_per_launch=2))
     ref4 = bitplane.run_planes(p, 4, p_force=0.03)
-    ok = bool((run3(pd3, 0) == ref4).all())
-    print(f"pallas 3-axis depth=2 T=2: {ok}")
-    if not ok:
-        failures.append(("2x2x2", 2, 2))
+    for overlap in (False, True):
+        run3 = jax.jit(distributed.make_run(
+            mesh3, 4, y_axes=("pod", "data"), x_axis="model", p_force=0.03,
+            depth=2, use_pallas=True, steps_per_launch=2, overlap=overlap))
+        ok = bool((run3(pd3, 0) == ref4).all())
+        print(f"pallas 3-axis depth=2 T=2 overlap={overlap}: {ok}")
+        if not ok:
+            failures.append(("2x2x2", 2, 2, overlap))
 
     # depth > hl must be rejected (halo cannot outreach the neighbour)
     try:
@@ -297,13 +301,16 @@ RULE_SCRIPT = textwrap.dedent("""
         p = bitplane.pack(jnp.asarray(state), n_planes=spec.n_planes)
         ref = rulespec.run_planes_rule(p, steps, spec)
         pd = jax.device_put(p, sh)
-        run = jax.jit(distributed.make_run(
-            mesh, steps, y_axes=("data",), x_axis="model", depth=depth,
-            use_pallas=True, steps_per_launch=T, variant=name))
-        ok = bool((run(pd, 0) == ref).all())
-        print(f"{name} sharded pallas depth={depth} T={T}: {ok}")
-        if not ok:
-            failures.append(name)
+        for overlap in (False, True):
+            run = jax.jit(distributed.make_run(
+                mesh, steps, y_axes=("data",), x_axis="model", depth=depth,
+                use_pallas=True, steps_per_launch=T, variant=name,
+                overlap=overlap))
+            ok = bool((run(pd, 0) == ref).all())
+            print(f"{name} sharded pallas depth={depth} T={T} "
+                  f"overlap={overlap}: {ok}")
+            if not ok:
+                failures.append((name, overlap))
 
     assert not failures, failures
     print("ALL_OK")

@@ -190,7 +190,7 @@ def test_2d_tile_admits_deep_T_on_wide_shards():
     # 2-D tiles fit T=8 (and T=7) comfortably
     assert vmem_bytes(32, we, 8, 256) <= VMEM_BUDGET_BYTES
     assert vmem_bytes(32, we, 7, 256) <= VMEM_BUDGET_BYTES
-    bh, bw, T, d = autotune_launch(8192, 2048, max_depth=16)
+    bh, bw, T, d, _ov = autotune_launch(8192, 2048, max_depth=16)
     assert T >= 7, (bh, bw, T, d)
     assert bw < we, "the tuner must split x on a VMEM-bound wide shard"
     assert vmem_bytes(bh, we, T, bw) <= VMEM_BUDGET_BYTES
@@ -211,8 +211,8 @@ def test_vmem_accounts_static_solid_operand():
     assert (vmem_bytes(8, 512, 2, static_solid=True)
             > vmem_bytes(8, 512, 2) * 7 / 8)
     # and the sharded tuner respects the budget on the static path
-    bh, bw, T, d = autotune_launch(8192, 2048, max_depth=16,
-                                   static_solid=True)
+    bh, bw, T, d, _ov = autotune_launch(8192, 2048, max_depth=16,
+                                        static_solid=True)
     assert vmem_bytes(bh, 2050, T, bw,
                       static_solid=True) <= VMEM_BUDGET_BYTES
 
