@@ -1,0 +1,171 @@
+"""Serve-engine benchmark: open-loop job load through the
+continuous-batching CA engine, with and without a seeded fault schedule.
+
+Metrics per profile (clean vs faulted, same job mix and seeds):
+
+* ``jobs_per_sec``      -- drained jobs / wall;
+* ``frame_lat_p50_s`` / ``frame_lat_p99_s`` -- percentiles of the
+  wall-clock gap between consecutive streamed frames of the same job
+  (the service's delivery cadence; stragglers and rollbacks land in the
+  p99);
+* ``recovery_overhead_pct`` -- replayed steps as a fraction of the
+  productive work (the deterministic rollback-replay tax), with the
+  engine's full recovery accounting (detections, rollbacks, steps
+  replayed, restore seconds) and the raw wall delta
+  (``wall_overhead_pct`` -- interpret-cache noise on CPU) alongside;
+* ``recovered_bit_exact`` -- asserted: every job of the faulted run
+  finishes bit-identical to the clean run (the fault tolerance is free
+  of silent divergence, not just of crashes).
+
+``--smoke`` runs the single-device engine on a tiny lattice (CI: the
+numbers are shapes-and-gates, not performance); the full profile runs
+the sharded engine on a 2x2 fake-device mesh through the Pallas kernel
+(interpret mode on CPU -- wall clock only meaningful on real chips).
+Both run in a subprocess so XLA device flags never leak.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve          # full
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke  # tiny/CI
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from typing import Dict, List
+
+SCRIPT = textwrap.dedent("""
+    import json, sys, time
+    import numpy as np
+
+    smoke = sys.argv[1] == "smoke"
+    if not smoke:
+        import os
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count=4")
+    import jax
+    from repro.serve import (CAServeEngine, FaultInjector, SimJob,
+                             make_schedule)
+
+    H, W = (16, 128) if smoke else (32, 256)
+    slots, jobs, steps = (2, 4, 12) if smoke else (4, 8, 24)
+    depth, frame_every = 2, 4
+    mesh = None if smoke else jax.make_mesh((2, 2), ("data", "model"))
+
+    def run_profile(injector, ckpt_dir):
+        eng = CAServeEngine(height=H, width=W, slots=slots, depth=depth,
+                            mesh=mesh, use_pallas=not smoke,
+                            steps_per_launch=depth if mesh else None,
+                            ckpt_dir=ckpt_dir, ckpt_every=2,
+                            injector=injector)
+        for rid in range(jobs):
+            sc = "bml_city" if rid % 2 else "cylinder"
+            eng.submit(SimJob(rid=rid, scenario=sc, steps=steps,
+                              frame_every=frame_every,
+                              overrides={"seed": rid}))
+        t0 = time.perf_counter()
+        done = eng.drain()
+        return eng, done, time.perf_counter() - t0
+
+    def frame_percentiles(eng):
+        gaps = []
+        last = {}
+        for e in eng.frame_log:
+            if e["rid"] in last:
+                gaps.append(e["wall"] - last[e["rid"]])
+            last[e["rid"]] = e["wall"]
+        if not gaps:
+            return None, None
+        return (float(np.percentile(gaps, 50)),
+                float(np.percentile(gaps, 99)))
+
+    import tempfile
+    clean, clean_done, clean_dt = run_profile(None, tempfile.mkdtemp())
+    # Both groups admit their whole job mix at t=0 (slots per group), so
+    # the fault window [first_round, rounds) spans the live span of the
+    # run -- every scheduled state fault lands on a running lattice.
+    rounds = steps // depth
+    inj = FaultInjector(make_schedule(
+        17, rounds, rules=("fhp2", "bml"), n_bitflip=1, n_nan=1,
+        n_torn=1, n_slow=1, delay_s=0.005, lanes=slots, first_round=3))
+    faulty, faulty_done, faulty_dt = run_profile(inj, tempfile.mkdtemp())
+
+    base = {j.rid: j.result for j in clean_done}
+    exact = (len(faulty_done) == len(clean_done) and
+             all(np.array_equal(j.result, base[j.rid])
+                 for j in faulty_done))
+    assert exact, "faulted run diverged from clean run"
+    n_corrupt = len(inj.corruption_events())
+    assert len(faulty.detections) == n_corrupt, (
+        faulty.detections, inj.events)
+
+    for label, eng, done, dt in (("clean", clean, clean_done, clean_dt),
+                                 ("faulted", faulty, faulty_done,
+                                  faulty_dt)):
+        p50, p99 = frame_percentiles(eng)
+        rec = {"bench": "serve",
+               "impl": "engine-single" if smoke else "engine-sharded",
+               "backend": jax.default_backend(),
+               "mesh": None if smoke else [2, 2],
+               "lattice": [H, W], "slots": slots, "jobs": jobs,
+               "steps": steps, "depth": depth, "B": slots,
+               "smoke": smoke, "structural": False, "profile": label,
+               "jobs_done": eng.stats["jobs_done"],
+               "rounds": eng.stats["rounds"],
+               "jobs_per_sec": len(done) / dt,
+               "frames": len(eng.frame_log),
+               "frame_lat_p50_s": p50, "frame_lat_p99_s": p99}
+        if label == "faulted":
+            # The deterministic recovery tax is the replayed-steps
+            # fraction of the productive work; the wall delta is kept as
+            # a secondary column but is compile/interpret-cache noise on
+            # CPU (see the interpret-mode caveat in EXPERIMENTS.md).
+            rec.update({
+                "faults_fired": len(inj.events),
+                "corruptions": n_corrupt,
+                "detections": len(eng.detections),
+                "rollbacks": eng.stats["rollbacks"],
+                "steps_replayed": eng.stats["steps_replayed"],
+                "restore_s": sum(r["restore_s"]
+                                 for r in eng.stats["recovery"]),
+                "quarantined": eng.stats["quarantined"],
+                "recovery_overhead_pct":
+                    100.0 * eng.stats["steps_replayed"] / (jobs * steps),
+                "wall_overhead_pct":
+                    100.0 * (faulty_dt - clean_dt) / clean_dt,
+                "recovered_bit_exact": exact})
+        print("RECORD " + json.dumps(rec))
+    print("BENCH_DONE")
+""")
+
+
+def main(smoke: bool | None = None) -> List[Dict]:
+    import jax
+    if smoke is None:
+        smoke = jax.default_backend() != "tpu"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT, "smoke" if smoke else "full"],
+        capture_output=True, text=True, timeout=1800, env=env)
+    if r.returncode != 0 or "BENCH_DONE" not in r.stdout:
+        # The bit-exact recovery assertion doubles as a CI gate: fail
+        # loudly, never emit a partial trajectory.
+        raise RuntimeError("bench_serve subprocess failed:\n"
+                           f"{r.stdout}\n{r.stderr}")
+    records = []
+    for line in r.stdout.splitlines():
+        if line.startswith("RECORD "):
+            rec = json.loads(line[len("RECORD "):])
+            records.append(rec)
+            extra = (f" recovery_overhead={rec['recovery_overhead_pct']:.1f}%"
+                     f" rollbacks={rec['rollbacks']}"
+                     if rec["profile"] == "faulted" else "")
+            print(f"serve_{rec['profile']}_jobs_per_sec,"
+                  f"{rec['jobs_per_sec']:.3f},jobs/s{extra}")
+    return records
+
+
+if __name__ == "__main__":
+    main(smoke=True if "--smoke" in sys.argv[1:] else None)

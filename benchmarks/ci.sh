@@ -25,7 +25,13 @@
 # degenerate fallbacks), and the JSON check asserts bench_distributed
 # emitted paired overlap on/off timed records at the same (lattice,
 # mesh, T, depth) -- measured ratio next to the modeled one -- plus the
-# headline ``overlap_speedup_modeled`` field.
+# headline ``overlap_speedup_modeled`` field.  The fault-tolerant-serve
+# gate: tier1 includes tests/test_checkpoint.py, tests/test_faults.py,
+# and tests/test_serve.py (select them alone with ``pytest -m "serve or
+# faults"``); bench_serve's smoke profile drives the engine with and
+# without a seeded fault schedule and *asserts bit-exact recovery*
+# before emitting records, and the JSON check below asserts the serve
+# headline (jobs/s + p99 frame latency + recovery overhead) is present.
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -58,6 +64,18 @@ assert all(r.get("overlap_speedup_modeled") is not None
            and r.get("overlap_speedup_measured") is not None
            for r in paired), "overlap pair missing modeled/measured ratio"
 assert hl.get("overlap_speedup_modeled"), "headline overlap ratio missing"
+
+srv = hl.get("serve")
+assert srv, "serve headline missing"
+assert srv.get("jobs_per_sec"), "serve headline has no throughput"
+assert srv.get("frame_lat_p99_s") is not None, "serve p99 latency missing"
+assert srv.get("recovery_overhead_pct") is not None, \
+    "serve recovery overhead missing"
+assert srv.get("recovered_bit_exact") is True, \
+    "faulted serve run not bit-exact after recovery"
+assert srv.get("rollbacks", 0) >= 1, "faulted serve profile never rolled back"
 print("BENCH_kernel.json gate: headline + 2-D x-block + bml_city + "
-      f"{len(pairs)} overlap pair(s) present")
+      f"{len(pairs)} overlap pair(s) + serve "
+      f"(recovery {srv['recovery_overhead_pct']:.1f}%, "
+      f"{srv['rollbacks']} rollback(s)) present")
 EOF

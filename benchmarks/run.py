@@ -11,6 +11,9 @@ temporal -> bench_temporal (steps-per-launch x ensemble-lane sweep)
 distributed -> bench_distributed ((depth, T, use_pallas) sharded sweep)
 scenarios -> bench_scenarios (registered geometries through the sharded
              static-geometry path; bit-exactness + exchange-byte model)
+serve    -> bench_serve   (continuous-batching job engine under open-loop
+             load, with/without seeded faults; jobs/s, frame latency
+             percentiles, recovery overhead, bit-exact recovery gate)
 
 The kernel-shaped benches (kernel, temporal, distributed) also return
 machine-readable records; this driver persists them to
@@ -61,17 +64,35 @@ def _headline(records):
           and r.get("overlap_speedup_modeled") is not None]
     ov_best = max((r["overlap_speedup_modeled"] for r in ov), default=None)
 
+    # The serve trajectory: clean-profile throughput/latency next to the
+    # faulted profile's recovery tax (bench_serve asserts bit-exact
+    # recovery before emitting, so a present record implies the gate).
+    srv = {r.get("profile"): r for r in records
+           if r.get("bench") == "serve"}
+    serve = None
+    if "clean" in srv and "faulted" in srv:
+        c, f = srv["clean"], srv["faulted"]
+        serve = {"impl": c.get("impl"), "lattice": c.get("lattice"),
+                 "slots": c.get("slots"), "jobs": c.get("jobs"),
+                 "jobs_per_sec": c.get("jobs_per_sec"),
+                 "frame_lat_p99_s": c.get("frame_lat_p99_s"),
+                 "recovery_overhead_pct": f.get("recovery_overhead_pct"),
+                 "rollbacks": f.get("rollbacks"),
+                 "recovered_bit_exact": f.get("recovered_bit_exact"),
+                 "smoke": c.get("smoke")}
+
     return {"best_single_device": best(("kernel", "temporal")),
             "best_sharded": best(("distributed", "scenarios")),
-            "overlap_speedup_modeled": ov_best}
+            "overlap_speedup_modeled": ov_best,
+            "serve": serve}
 
 
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     smoke = "--smoke" in argv
     from benchmarks import (bench_distributed, bench_fig9, bench_fig10,
-                            bench_kernel, bench_scenarios, bench_table1,
-                            bench_temporal)
+                            bench_kernel, bench_scenarios, bench_serve,
+                            bench_table1, bench_temporal)
     records = []
     paper_benches = [] if smoke else [
         ("table1", bench_table1), ("fig9", bench_fig9),
@@ -83,7 +104,8 @@ def main(argv=None) -> None:
         print(f"-- {name} done in {time.time() - t0:.1f}s --\n")
     for name, mod in [("kernel", bench_kernel), ("temporal", bench_temporal),
                       ("distributed", bench_distributed),
-                      ("scenarios", bench_scenarios)]:
+                      ("scenarios", bench_scenarios),
+                      ("serve", bench_serve)]:
         print(f"== {name} ==")
         t0 = time.time()
         records.extend(mod.main(smoke=smoke or None) or [])

@@ -1,2 +1,6 @@
-from repro.checkpoint.store import (CheckpointManager, latest_step,  # noqa: F401
-                                    load_meta, restore, save)
+from repro.checkpoint.store import (CheckpointError,  # noqa: F401
+                                    CheckpointExistsError, CheckpointManager,
+                                    ChecksumError, LeafMismatchError,
+                                    ManifestError, latest_step,
+                                    latest_valid_step, load_meta, restore,
+                                    save, verify_checkpoint)

@@ -312,6 +312,54 @@ def make_run(mesh, steps: int, **kw):
     return run
 
 
+def make_ensemble_run(mesh, steps: int, *, variant: str = "fhp2",
+                      p_force: float = 0.0, depth: int = 1,
+                      use_pallas: bool = False,
+                      steps_per_launch: int | None = None,
+                      block_rows: int = 0, block_words: int = 0,
+                      overlap: bool = False, y_axes: Axes = ("data",),
+                      x_axis: str = "model"):
+    """``(run, sharding)`` for a batched ``(B, n_planes, H, Wd)`` ensemble:
+    the serve engine's one entry point for advancing a lane group.
+
+    ``run(planes, t0)`` advances every lane ``steps`` global CA steps
+    under ``variant``; lanes are independent and the RNG counters carry
+    no lane index, so each lane is bit-identical to the unbatched
+    reference at the same ``t`` window (the engine's rollback-replay and
+    job-vs-reference audits both lean on this).
+
+    ``mesh=None`` is the single-device path (``sharding`` is None):
+    the fused Pallas kernel when ``use_pallas`` else the jnp bit-plane
+    fallback.  With a mesh, the sharded halo-exchange stepper runs with
+    the given ``(depth, T, blocks, overlap)`` point and ``sharding`` is
+    the batched lattice ``NamedSharding`` to place states with.
+    """
+    if mesh is None:
+        rule = rulespec.get_rule(variant)
+        if use_pallas:
+            from repro.kernels.fhp_step import ops
+
+            def run(planes, t0):
+                return ops.run_pallas(
+                    planes, steps, p_force=p_force, t0=t0,
+                    steps_per_launch=steps_per_launch or 1,
+                    block_rows=block_rows, block_words=block_words,
+                    variant=variant)
+        else:
+            def run(planes, t0):
+                return rulespec.run_planes_rule(planes, steps, rule,
+                                                p_force=p_force, t0=t0)
+        return run, None
+    run = make_run(mesh, steps, y_axes=y_axes, x_axis=x_axis,
+                   p_force=p_force, depth=depth, use_pallas=use_pallas,
+                   batched=True, steps_per_launch=steps_per_launch,
+                   block_rows=block_rows, block_words=block_words,
+                   overlap=overlap, variant=variant)
+    sharding = NamedSharding(mesh, lattice_spec(y_axes, x_axis,
+                                                batched=True))
+    return run, sharding
+
+
 def make_gspmd_run(mesh, steps: int, *, y_axes: Axes = ("data",),
                    x_axis: str = "model", p_force: float = 0.0,
                    batched: bool = False, variant: str = "fhp2"):

@@ -87,6 +87,10 @@ class RuleSpec:
     ``mass_planes`` are the planes whose popcount sum is the conserved
     particle count; ``per_plane_conserved`` claims each mass plane's
     count is *separately* conserved (BML: cars never change species).
+    ``exclusive_planes`` declares that at most one of the named planes
+    may be set per cell at all times (BML: a cell holds one car) -- a
+    *structural* invariant checked without reference values, so it
+    catches corruption that happens to preserve counts.
     """
 
     name: str
@@ -104,6 +108,7 @@ class RuleSpec:
     conserves_momentum: bool = False
     mass_planes: Tuple[int, ...] = ()
     per_plane_conserved: bool = False
+    exclusive_planes: Tuple[int, ...] = ()
 
     def __post_init__(self):
         assert self.n_planes >= 1
@@ -255,7 +260,8 @@ register_rule(RuleSpec(
     needs_rng=False, oracle_step=bml_step_bytes, init_bytes=bml_init_bytes,
     n_substeps=2, solid_plane=None, force=None,
     conserves_mass=True, conserves_momentum=False,
-    mass_planes=(0, 1), per_plane_conserved=True))
+    mass_planes=(0, 1), per_plane_conserved=True,
+    exclusive_planes=(0, 1)))
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +324,91 @@ def run_planes_rule(planes: jnp.ndarray, steps: int, spec: RuleSpec,
     def body(i, s):
         return step_planes_rule(s, t0 + i, spec, p_force)
     return jax.lax.fori_loop(0, int(steps), body, planes)
+
+
+# ---------------------------------------------------------------------------
+# Invariant audits: every registered rule carries exact conservation laws,
+# so corruption of a packed state is detectable *for free* by popcount
+# reductions -- no reference run needed.  The serve layer audits these per
+# cadence and treats any violation as a corruption signal (rollback).
+# ---------------------------------------------------------------------------
+
+def _pop(p: jnp.ndarray) -> jnp.ndarray:
+    import jax
+    dt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    return jax.lax.population_count(p).sum(axis=(-2, -1), dtype=dt)
+
+
+def invariants(spec: RuleSpec, planes: jnp.ndarray, *,
+               with_momentum: bool = False) -> Dict[str, jnp.ndarray]:
+    """Per-lane conserved quantities of ``spec`` on packed
+    ``(..., n_planes, H, Wd)`` planes (leading axes = ensemble lanes).
+
+    Keys: ``mass`` (popcount sum over ``mass_planes``); ``plane{i}`` per
+    mass plane when ``per_plane_conserved`` (BML species counts);
+    ``solid`` (the static geometry plane's popcount -- the update never
+    touches it, so it is conserved for any rule that has one);
+    ``px2``/``py`` (doubled-x / y momentum) when ``with_momentum`` and
+    the rule conserves momentum.  Momentum is only an invariant on a
+    free torus -- callers must not request it for states with solid
+    sites or under forcing (bounce-back and the body force both inject
+    momentum by design)."""
+    assert planes.shape[-3] == spec.n_planes, (planes.shape, spec.name)
+    out: Dict[str, jnp.ndarray] = {}
+    if spec.conserves_mass and spec.mass_planes:
+        counts = [_pop(planes[..., i, :, :]) for i in spec.mass_planes]
+        out["mass"] = sum(counts[1:], counts[0])
+        if spec.per_plane_conserved:
+            for i, c in zip(spec.mass_planes, counts):
+                out[f"plane{i}"] = c
+    if spec.solid_plane is not None:
+        out["solid"] = _pop(planes[..., spec.solid_plane, :, :])
+    if with_momentum and spec.conserves_momentum:
+        px2 = jnp.zeros(planes.shape[:-3], jnp.int32)
+        py = jnp.zeros(planes.shape[:-3], jnp.int32)
+        for i in range(rules.N_DIR):
+            c = _pop(planes[..., i, :, :]).astype(jnp.int32)
+            px2 = px2 + c * int(rules.CX2[i])
+            py = py + c * int(rules.CY[i])
+        out["px2"], out["py"] = px2, py
+    return out
+
+
+def integrity_ok(spec: RuleSpec, planes: jnp.ndarray) -> jnp.ndarray:
+    """Per-lane boolean: the *structural* invariants hold (currently
+    ``exclusive_planes`` -- no cell carries two exclusive species).
+    Unlike :func:`invariants` this needs no reference values, so it
+    catches compensating corruption that preserves every count."""
+    ok = jnp.ones(planes.shape[:-3], bool)
+    exc = spec.exclusive_planes
+    for a in range(len(exc)):
+        for b in range(a + 1, len(exc)):
+            overlap = planes[..., exc[a], :, :] & planes[..., exc[b], :, :]
+            ok = ok & (_pop(overlap) == 0)
+    return ok
+
+
+def audit(spec: RuleSpec, planes: jnp.ndarray, expected: Dict[str, object],
+          *, with_momentum: bool = False) -> Dict[str, Tuple]:
+    """Compare a state's invariants against ``expected`` (the values
+    recorded at admission / last audited checkpoint).
+
+    Returns ``{name: (expected, found)}`` for every violated invariant
+    (empty dict == clean).  ``integrity`` appears with expected ``True``
+    when a structural check fails.  Works on single-lane states; for
+    batched lanes audit each lane's slice (the serve engine does)."""
+    found = invariants(spec, planes, with_momentum=with_momentum)
+    bad = {}
+    for name, want in expected.items():
+        if name not in found:
+            continue
+        got = found[name]
+        if not bool((got == jnp.asarray(want)).all()):
+            bad[name] = (np.asarray(want).tolist(),
+                         np.asarray(got).tolist())
+    if not bool(integrity_ok(spec, planes).all()):
+        bad["integrity"] = (True, False)
+    return bad
 
 
 def oracle_run(state, steps: int, spec: RuleSpec, t0: int = 0):

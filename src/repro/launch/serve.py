@@ -1,48 +1,90 @@
-"""Serving launcher: batched greedy decoding with the slot engine.
+"""CA simulation-service launcher: continuous-batching job engine with
+fault injection and rollback-replay.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch repro-100m --smoke \
-        --requests 8 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --jobs 8 --steps 16 \
+        --height 32 --width 128 --ckpt-dir /tmp/ca_ckpt
+    PYTHONPATH=src python -m repro.launch.serve --jobs 8 --faults 3
+
+``--mesh ny nx`` runs the sharded engine on a fake-device mesh (set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` accordingly);
+``--faults SEED`` drives a seeded fault schedule (bit flips + garbaged
+shards + torn checkpoints) through the run and reports detection /
+recovery statistics.  The LM decode demo lives in
+``examples/serve_lm.py``.
 """
 from __future__ import annotations
 
 import argparse
 import sys
+import tempfile
 import time
-
-import numpy as np
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="repro-100m")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch-size", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--height", type=int, default=32)
+    ap.add_argument("--width", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--jobs", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--frame-every", type=int, default=4)
+    ap.add_argument("--depth", type=int, default=2)
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--mesh", type=int, nargs=2, default=None,
+                    metavar=("NY", "NX"))
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=2)
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED")
+    ap.add_argument("--scenarios", nargs="*",
+                    default=["cylinder", "bml_city"])
     args = ap.parse_args(argv)
 
     import jax
-    from repro.configs import get_config, get_smoke
-    from repro.models import init_params
-    from repro.serve import Request, ServeEngine
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    params, _ = init_params(cfg, jax.random.key(0))
-    eng = ServeEngine(params, cfg, batch_size=args.batch_size,
-                      max_len=args.max_len)
-    rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        plen = int(rng.integers(4, 17))
-        eng.submit(Request(
-            rid=rid, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
-            max_new=args.max_new))
+    from repro.serve import CAServeEngine, FaultInjector, SimJob, \
+        make_schedule
+
+    mesh = None
+    if args.mesh:
+        mesh = jax.make_mesh(tuple(args.mesh), ("data", "model"))
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="ca_serve_")
+    injector = None
+    if args.faults is not None:
+        # Schedule over the rounds the run actually spans: jobs batch
+        # concurrently (slots lanes per scenario group), so the run
+        # lasts waves * steps/depth rounds, not jobs * steps/depth.
+        groups = max(len(set(args.scenarios)), 1)
+        per_group = -(-args.jobs // groups)
+        waves = -(-per_group // args.slots)
+        rounds = max(waves * (args.steps // args.depth), 4)
+        injector = FaultInjector(make_schedule(
+            args.faults, rounds, n_bitflip=1, n_nan=1, n_torn=1,
+            lanes=args.slots))
+    eng = CAServeEngine(
+        height=args.height, width=args.width, slots=args.slots,
+        mesh=mesh, depth=args.depth, use_pallas=args.use_pallas,
+        ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
+        injector=injector)
+    for rid in range(args.jobs):
+        eng.submit(SimJob(rid=rid,
+                          scenario=args.scenarios[rid % len(args.scenarios)],
+                          steps=args.steps, frame_every=args.frame_every,
+                          overrides={"seed": rid}))
     t0 = time.perf_counter()
-    done = eng.run_until_done()
+    done = eng.drain()
     dt = time.perf_counter() - t0
-    toks = sum(len(r.out) for r in done)
-    print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s)")
+    frames = sum(len(j.frames) for j in eng.jobs.values())
+    print(f"served {len(done)}/{args.jobs} jobs, {frames} frames in "
+          f"{dt:.2f}s ({len(done) / dt:.2f} jobs/s) over "
+          f"{eng.stats['rounds']} rounds")
+    if injector is not None:
+        print(f"faults fired: {len(injector.events)} "
+              f"({len(injector.corruption_events())} corrupting); "
+              f"detections: {len(eng.detections)}; "
+              f"rollbacks: {eng.stats['rollbacks']}; "
+              f"steps replayed: {eng.stats['steps_replayed']}; "
+              f"quarantined: {eng.stats['quarantined']}")
     return 0
 
 

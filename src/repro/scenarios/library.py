@@ -17,26 +17,28 @@ from repro.scenarios.registry import register
 @register("cylinder")
 def cylinder(height: int = 96, width: int = 384, radius: int | None = None,
              density: float = 0.22, p_force: float = 0.03,
-             seed: int = 0) -> Scenario:
-    """Flow past a cylinder: wake deficit + bypass acceleration."""
+             seed: int = 0, variant: str = "fhp2") -> Scenario:
+    """Flow past a cylinder: wake deficit + bypass acceleration.
+    ``variant`` selects the collision circuit (fhp2 / fhp3)."""
     r = radius if radius is not None else max(2, height // 9)
     disk = Disk(height // 2, width // 4, r)
     return Scenario(
         name="cylinder", height=height, width=width,
         geometry=channel_walls(height) | disk,
-        density=density, p_force=p_force, seed=seed,
+        density=density, p_force=p_force, seed=seed, variant=variant,
         description="driven channel with a solid disk (wake behind it)",
         obstacles=(("disk", disk),))
 
 
 @register("poiseuille")
 def poiseuille(height: int = 64, width: int = 512, density: float = 0.2,
-               p_force: float = 0.02, seed: int = 1) -> Scenario:
+               p_force: float = 0.02, seed: int = 1,
+               variant: str = "fhp2") -> Scenario:
     """Body-forced channel: parabolic velocity profile."""
     return Scenario(
         name="poiseuille", height=height, width=width,
         geometry=channel_walls(height),
-        density=density, p_force=p_force, seed=seed,
+        density=density, p_force=p_force, seed=seed, variant=variant,
         description="plane channel, weak body force, parabolic profile")
 
 

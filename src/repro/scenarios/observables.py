@@ -111,6 +111,30 @@ def jam_fraction(planes: jnp.ndarray, t) -> jnp.ndarray:
     return blocked / jnp.maximum(total, 1.0)
 
 
+def frame_summary(planes: jnp.ndarray, spec, t) -> dict:
+    """One streamed observable frame for a single-lane packed state of
+    rule ``spec`` (a :class:`repro.core.rulespec.RuleSpec`): plain
+    Python numbers, JSON-ready -- what the serve engine sends back to a
+    client per cadence.
+
+    Always carries ``mass``; FHP-family rules add the global momentum
+    moments (``px2``/``py``); BML-style exclusive-species rules add
+    per-species ``car_counts`` and the ``jam_fraction`` order
+    parameter."""
+    from repro.core import rulespec
+    inv = rulespec.invariants(spec, planes,
+                              with_momentum=spec.conserves_momentum)
+    out = {"t": int(t), "mass": int(inv["mass"])}
+    if "px2" in inv:
+        out["px2"], out["py"] = int(inv["px2"]), int(inv["py"])
+    if spec.per_plane_conserved:
+        out["car_counts"] = [int(inv[f"plane{i}"])
+                             for i in spec.mass_planes]
+    if spec.exclusive_planes == (0, 1) and spec.n_planes == 2:
+        out["jam_fraction"] = float(jam_fraction(planes, t))
+    return out
+
+
 def obstacle_report(planes: jnp.ndarray, scenario) -> dict:
     """Per-obstacle momentum transfer for a Scenario's named obstacles:
     {name: (px2, py)} as plain ints (single-lane states)."""

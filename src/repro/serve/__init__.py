@@ -1,1 +1,8 @@
-from repro.serve.engine import Request, ServeEngine  # noqa: F401
+"""Serving engines: the CA simulation service (``engine``) and the
+LM decode engine the seed shipped with (``lm_engine``)."""
+from repro.serve.engine import (DONE, QUARANTINED, QUEUED,  # noqa: F401
+                                RUNNING, CAServeEngine, SimJob)
+from repro.serve.faults import (Fault, FaultEvent,  # noqa: F401
+                                FaultInjector, SimulatedCrash,
+                                make_schedule)
+from repro.serve.lm_engine import Request, ServeEngine  # noqa: F401

@@ -1,137 +1,506 @@
-"""Batched serving engine: slot-based continuous batching over a fixed
-decode batch.
+"""Fault-tolerant CA simulation service: slot-based continuous batching
+of simulation jobs into the ensemble lane axis, with invariant-audited
+checkpoints and rollback-replay.
 
-The engine keeps ``batch_size`` decode slots.  Incoming requests are
-prefill'd one at a time (prefill is jit'd per prompt-length bucket) and
-their caches written into a free slot; every ``step()`` advances all live
-slots by one token with the single jit'd batched ``decode_step``.
-Finished requests (EOS or max-new-tokens) free their slot for the queue.
+Clients submit :class:`SimJob`\\ s -- ``(scenario, rule, params, steps)``
+from the scenario registry.  The engine packs live jobs into the ``B``
+axis of the batched ``(B, n_planes, H, Wd)`` lane stack (one *lane
+group* per ``(rule, p_force)``, since the collision circuit and the
+forcing constant are launch-wide), advances every group ``depth`` global
+steps per *round* through the temporal-blocked sharded kernel
+(``core.distributed.make_ensemble_run``), streams observable frames back
+per job cadence, and admits/retires jobs at round boundaries
+(continuous batching, as in LM serving -- but the "KV cache" is a
+lattice and the "tokens" are CA steps).
 
-This is deliberately the *structure* of a production server (vLLM-style
-slots + batched decode) at a size that runs on CPU in tests; the dry-run
-lowers the same ``decode_step`` at the assigned (batch, seq) shapes.
+Robustness layer (why this is a *service* and not a batch script):
+
+* **Invariant audits.**  Every registered rule carries exact
+  conservation laws (``core.rulespec.invariants``): mass, per-species
+  counts, solid-plane popcount, momentum on free tori, and structural
+  exclusivity.  Each audit cadence the engine compares every live
+  lane against the values recorded at admission -- any mismatch is
+  corruption, detected *for free* (popcount reductions, no reference
+  run).
+* **Audited checkpoints.**  Checkpoints are only written on rounds whose
+  audit passed, so the rollback anchor is always a known-good state;
+  ``checkpoint.store`` adds per-leaf checksums and
+  ``latest_valid_step``, so torn/corrupt checkpoints on disk are skipped
+  at restore time.
+* **Rollback-and-replay.**  On detection the engine restores the last
+  audited checkpoint and replays.  The RNG is counter-based on global
+  ``(t, row, word)``, so the replay is *bit-exact*: a recovered run is
+  indistinguishable from one that never faulted.  Retries are bounded
+  per job; a job that keeps triggering detections (a persistent fault)
+  is **quarantined** -- its lane zeroed and freed -- so one poisoned job
+  degrades gracefully instead of sinking the whole batch.
+* **Crash resume.**  :meth:`CAServeEngine.resume` reconstructs the whole
+  engine (lane states, job bookkeeping, admission queue) from the last
+  valid checkpoint after a process death.
+
+A :class:`repro.serve.faults.FaultInjector` can be attached to drive the
+deterministic fault schedule (bit flips, garbaged shards, torn
+checkpoints, kills, stragglers) that the tests and ``bench_serve``
+exercise recovery with.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_cache, prefill
+from repro.checkpoint import store
+from repro.core import distributed, rulespec
+
+QUEUED, RUNNING, DONE, QUARANTINED = \
+    "queued", "running", "done", "quarantined"
 
 
 @dataclasses.dataclass
-class Request:
+class SimJob:
+    """One simulation job: a registry scenario advanced ``steps`` CA
+    steps, with an observable frame streamed every ``frame_every``
+    steps (0 = final state only).  ``overrides`` pass through to
+    ``scenarios.get`` (density, seed, ... -- height/width are pinned by
+    the engine's lattice).  Runtime fields are engine-managed."""
+
     rid: int
-    prompt: np.ndarray              # (S,) int32
-    max_new: int = 16
-    eos: int = -1                   # -1: never stop early
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+    scenario: str
+    steps: int
+    frame_every: int = 0
+    overrides: dict = dataclasses.field(default_factory=dict)
+    # --- runtime (engine-managed) ---
+    status: str = QUEUED
+    lane: int = -1
+    admitted_t: int = -1
+    steps_done: int = 0
+    expected: dict = dataclasses.field(default_factory=dict)
+    with_momentum: bool = False
+    frames: dict = dataclasses.field(default_factory=dict)   # t -> frame
+    result: Optional[np.ndarray] = None                      # final planes
+
+    def to_meta(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("rid", "scenario", "steps", "frame_every", "overrides",
+                 "status", "lane", "admitted_t", "steps_done", "expected",
+                 "with_momentum")}
+
+    @classmethod
+    def from_meta(cls, m: dict) -> "SimJob":
+        job = cls(rid=m["rid"], scenario=m["scenario"], steps=m["steps"],
+                  frame_every=m["frame_every"], overrides=m["overrides"])
+        for k in ("status", "lane", "admitted_t", "steps_done",
+                  "expected", "with_momentum"):
+            setattr(job, k, m[k])
+        return job
 
 
-class ServeEngine:
-    def __init__(self, params, cfg, batch_size: int, max_len: int,
-                 cache_dtype=jnp.float32, greedy: bool = True,
-                 temperature: float = 1.0, top_k: int = 0, seed: int = 0):
-        self.params, self.cfg = params, cfg
-        self.bs, self.max_len = batch_size, max_len
-        self.greedy = greedy
-        self.temperature, self.top_k = temperature, top_k
-        self._rng = np.random.default_rng(seed)
-        self.cache = init_cache(cfg, batch_size, max_len, cache_dtype)
-        self.cache_dtype = cache_dtype
-        self.slots: List[Optional[Request]] = [None] * batch_size
-        self.pos = np.zeros(batch_size, np.int32)     # next write position
-        self.last_tok = np.zeros(batch_size, np.int32)
+class _LaneGroup:
+    """One batched lane stack: every live job of one ``(rule, p_force)``
+    shares the jitted runner and the ``(B, n_planes, H, Wd)`` state."""
+
+    def __init__(self, engine: "CAServeEngine", variant: str,
+                 p_force: float):
+        self.variant, self.p_force = variant, p_force
+        self.spec = rulespec.get_rule(variant)
+        self.slots: List[Optional[SimJob]] = [None] * engine.slots
+        run, self.sharding = distributed.make_ensemble_run(
+            engine.mesh, engine.round_steps, variant=variant,
+            p_force=p_force, depth=engine.depth,
+            use_pallas=engine.use_pallas,
+            steps_per_launch=engine.steps_per_launch,
+            y_axes=engine.y_axes, x_axis=engine.x_axis)
+        self.run = jax.jit(run)
+        shape = (engine.slots, self.spec.n_planes, engine.height,
+                 engine.width // 32)
+        self.state = self._place(jnp.zeros(shape, jnp.uint32))
+
+    def _place(self, state):
+        return (jax.device_put(state, self.sharding)
+                if self.sharding is not None else state)
+
+    def live_jobs(self) -> List[SimJob]:
+        return [j for j in self.slots if j is not None]
+
+    def key(self) -> str:
+        return f"{self.variant}|{self.p_force}"
+
+
+class CAServeEngine:
+    """The continuous-batching CA job engine (see module docstring).
+
+    ``depth`` CA steps advance per round (one halo exchange on a mesh);
+    ``audit_every`` / ``ckpt_every`` are in rounds, and checkpoints are
+    only taken on audited-clean rounds (``ckpt_every`` must be a
+    multiple of ``audit_every``).  ``mesh=None`` runs single-device.
+    """
+
+    def __init__(self, *, height: int, width: int, slots: int = 4,
+                 mesh=None, y_axes=("data",), x_axis: str = "model",
+                 depth: int = 2, steps_per_launch: Optional[int] = None,
+                 use_pallas: bool = False, audit_every: int = 1,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 keep: int = 4, max_retries: int = 2, injector=None):
+        assert height % 2 == 0 and width % 32 == 0, (height, width)
+        assert audit_every >= 1
+        assert ckpt_every % audit_every == 0, \
+            "checkpoints must land on audit rounds (audited anchors only)"
+        self.height, self.width, self.slots = height, width, slots
+        self.mesh, self.y_axes, self.x_axis = mesh, y_axes, x_axis
+        self.depth = depth
+        self.round_steps = depth        # CA steps per engine round
+        self.steps_per_launch = steps_per_launch
+        self.use_pallas = use_pallas
+        self.audit_every, self.ckpt_every = audit_every, ckpt_every
+        self.ckpt_dir, self.keep = ckpt_dir, keep
+        self.max_retries = max_retries
+        self.injector = injector
+        self.round = 0                  # completed rounds
         self.queue: deque = deque()
-        self.finished: List[Request] = []
-        self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
-        self._prefill = jax.jit(
-            lambda p, b: prefill(p, cfg, b, max_len=max_len,
-                                 cache_dtype=cache_dtype),
-            static_argnums=())
+        self.jobs: Dict[int, SimJob] = {}
+        self.groups: Dict[str, _LaneGroup] = {}
+        self._retries: Dict[int, int] = {}   # survives rollback on purpose
+        self.detections: List[dict] = []
+        self.frame_log: List[dict] = []
+        self.stats = {"rounds": 0, "rollbacks": 0, "quarantined": 0,
+                      "jobs_done": 0, "steps_replayed": 0, "recovery": []}
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    # ------------------------------------------------------------------
+    # Submission / admission
+    # ------------------------------------------------------------------
 
-    def _write_slot_cache(self, slot: int, src_cache):
-        """Copy a single-request prefill cache into batch slot ``slot``.
+    def submit(self, job: SimJob) -> SimJob:
+        assert job.rid not in self.jobs, f"duplicate rid {job.rid}"
+        self.jobs[job.rid] = job
+        self.queue.append(job.rid)
+        return job
 
-        Cache leaves carry the batch dim wherever their family puts it
-        (axis 1 for (layers, B, ...) stacks, axis 2 for zamba2's
-        (groups, period, B, ...) ssm states); it is identified as the axis
-        where dst extent == batch_size and src extent == 1-request."""
-        def assign(dst, src):
-            axis = next(a for a in range(dst.ndim)
-                        if dst.shape[a] == self.bs and src.shape[a] == 1
-                        and dst.shape[:a] == src.shape[:a])
-            return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), slot, axis=axis)
-        self.cache = jax.tree.map(assign, self.cache, src_cache)
+    def _scenario(self, job: SimJob):
+        from repro import scenarios
+        return scenarios.get(job.scenario, height=self.height,
+                             width=self.width, **job.overrides)
 
-    def _select(self, logits_row: np.ndarray) -> int:
-        """Greedy argmax or temperature/top-k sampling."""
-        if self.greedy:
-            return int(np.argmax(logits_row))
-        lg = logits_row.astype(np.float64) / max(self.temperature, 1e-6)
-        if self.top_k:
-            kth = np.partition(lg, -self.top_k)[-self.top_k]
-            lg = np.where(lg >= kth, lg, -np.inf)
-        p = np.exp(lg - lg.max())
-        p /= p.sum()
-        return int(self._rng.choice(len(p), p=p))
+    def _group_for(self, sc) -> _LaneGroup:
+        key = f"{sc.variant}|{sc.p_force}"
+        if key not in self.groups:
+            self.groups[key] = _LaneGroup(self, sc.variant, sc.p_force)
+        return self.groups[key]
 
-    def _fill_free_slots(self):
-        for i in range(self.bs):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-                if self.cfg.frontend == "frames":
-                    batch["frames"] = jnp.zeros(
-                        (1, len(req.prompt), self.cfg.d_model), jnp.float32)
-                last_logits, rcache = self._prefill(self.params, batch)
-                self._write_slot_cache(i, rcache)
-                tok = self._select(np.asarray(last_logits[0]))
-                req.out.append(tok)
-                self.slots[i] = req
-                self.pos[i] = len(req.prompt)
-                self.last_tok[i] = tok
+    def _admit(self):
+        """Fill free lanes from the queue at this round boundary.  Each
+        queued job is attempted once in FIFO order; a job whose lane
+        group is full keeps its place without blocking jobs bound for
+        other groups."""
+        leftover = []
+        for _ in range(len(self.queue)):
+            rid = self.queue.popleft()
+            job = self.jobs[rid]
+            sc = self._scenario(job)
+            g = self._group_for(sc)
+            free = [i for i, s in enumerate(g.slots) if s is None]
+            if not free:
+                leftover.append(rid)         # keep order; group is full
+                continue
+            lane = free[0]
+            planes = sc.initial_planes()
+            g.state = g._place(g.state.at[lane].set(planes))
+            job.status, job.lane = RUNNING, lane
+            job.admitted_t = self.round * self.round_steps
+            job.steps_done = 0
+            spec = g.spec
+            # Momentum is only conserved on a free torus without forcing.
+            job.with_momentum = bool(
+                spec.conserves_momentum and sc.p_force == 0.0
+                and not sc.solid_mask().any())
+            inv = rulespec.invariants(spec, planes,
+                                      with_momentum=job.with_momentum)
+            job.expected = {k: np.asarray(v).tolist()
+                            for k, v in inv.items()}
+            g.slots[lane] = job
+        self.queue.extendleft(reversed(leftover))
 
-    def step(self) -> int:
-        """One batched decode step over all live slots (per-row positions);
-        returns the number of live slots advanced."""
-        self._fill_free_slots()
-        live = [i for i in range(self.bs) if self.slots[i] is not None]
-        if not live:
-            return 0
-        toks = jnp.asarray(self.last_tok)
-        pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
-        lg = np.asarray(logits)
-        for i in live:
-            tok = self._select(lg[i])
-            req = self.slots[i]
-            req.out.append(tok)
-            self.last_tok[i] = tok
-            self.pos[i] += 1
-            if (tok == req.eos or len(req.out) >= req.max_new
-                    or self.pos[i] >= self.max_len - 1):
-                req.done = True
-                self.finished.append(req)
-                self.slots[i] = None
-                self.pos[i] = 0
-        return len(live)
+    # ------------------------------------------------------------------
+    # The round loop
+    # ------------------------------------------------------------------
 
-    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
-        steps = 0
-        while (self.queue or any(s is not None for s in self.slots)) \
-                and steps < max_steps:
-            self.step()
-            steps += 1
-        return self.finished
+    def tick(self):
+        """One engine round: (maybe) crash/straggle, admit, advance every
+        live group ``depth`` steps, inject state faults, audit, recover or
+        stream/retire/checkpoint."""
+        rnd = self.round
+        if self.injector is not None:
+            self.injector.before_round(rnd)     # may raise SimulatedCrash
+        self._admit()
+        t = rnd * self.round_steps
+        for g in self.groups.values():
+            if not g.live_jobs():
+                continue
+            g.state = g.run(g.state, t)
+            if self.injector is not None:
+                host = np.asarray(g.state)
+                bad = self.injector.corrupt(host, g.variant, rnd)
+                if bad is not host:
+                    g.state = g._place(jnp.asarray(bad))
+        self.round = rnd + 1
+        self.stats["rounds"] += 1
+        for g in self.groups.values():
+            for job in g.live_jobs():
+                job.steps_done += self.round_steps
+
+        if self.round % self.audit_every == 0:
+            violations = self._audit()
+            if violations:
+                self._recover(violations)
+                return
+        self._stream_frames()
+        self._retire()
+        if (self.ckpt_dir and self.ckpt_every
+                and self.round % self.ckpt_every == 0):
+            self._checkpoint()
+
+    def drain(self, max_rounds: int = 10_000) -> List[SimJob]:
+        """Run rounds until every submitted job is done or quarantined."""
+        rounds = 0
+        while (self.queue or any(g.live_jobs()
+                                 for g in self.groups.values())):
+            assert rounds < max_rounds, "drain exceeded max_rounds"
+            self.tick()
+            rounds += 1
+        return [j for j in self.jobs.values() if j.status == DONE]
+
+    # ------------------------------------------------------------------
+    # Audits and recovery
+    # ------------------------------------------------------------------
+
+    def _audit(self) -> List[dict]:
+        """Per-lane invariant audit of every live job; returns the
+        violation records (empty == clean)."""
+        out = []
+        for g in self.groups.values():
+            jobs = g.live_jobs()
+            if not jobs:
+                continue
+            momentum = any(j.with_momentum for j in jobs)
+            inv = rulespec.invariants(g.spec, g.state,
+                                      with_momentum=momentum)
+            inv = {k: np.asarray(v) for k, v in inv.items()}
+            ok_struct = np.asarray(rulespec.integrity_ok(g.spec, g.state))
+            for job in jobs:
+                bad = {}
+                for name, want in job.expected.items():
+                    if name in ("px2", "py") and not job.with_momentum:
+                        continue
+                    got = inv[name][job.lane]
+                    if not np.array_equal(np.asarray(want), got):
+                        bad[name] = (want, np.asarray(got).tolist())
+                if not bool(ok_struct[job.lane]):
+                    bad["integrity"] = (True, False)
+                if bad:
+                    out.append({"round": self.round, "rule": g.variant,
+                                "lane": job.lane, "rid": job.rid,
+                                "violations": bad})
+        return out
+
+    def _recover(self, violations: List[dict]):
+        """Bounded-retry rollback; quarantine jobs that keep faulting."""
+        t0 = time.perf_counter()
+        self.detections.extend(violations)
+        flagged = {v["rid"] for v in violations}
+        quarantine = set()
+        for rid in flagged:
+            self._retries[rid] = self._retries.get(rid, 0) + 1
+            if self._retries[rid] > self.max_retries:
+                quarantine.add(rid)
+        retry = flagged - quarantine
+        if retry:
+            anchor = (store.latest_valid_step(self.ckpt_dir)
+                      if self.ckpt_dir else None)
+            if anchor is None:
+                # No audited checkpoint to roll back to: restart the
+                # offending jobs from their initial state (counts as the
+                # retry; healthy lanes are untouched).
+                for rid in retry:
+                    self._restart_job(self.jobs[rid])
+            else:
+                detected_at = self.round
+                self._restore_from(anchor)
+                lost = (detected_at - self.round) * self.round_steps
+                self.stats["rollbacks"] += 1
+                self.stats["steps_replayed"] += lost
+                self.stats["recovery"].append(
+                    {"detected_round": detected_at,
+                     "restored_round": self.round, "steps_lost": lost,
+                     "restore_s": time.perf_counter() - t0})
+        # Quarantine *after* any rollback, so the restored bookkeeping
+        # cannot resurrect a job retired for repeated faults.
+        for rid in quarantine:
+            job = self.jobs[rid]
+            if job.status == RUNNING:
+                self._quarantine(job)
+            else:
+                if rid in self.queue:
+                    self.queue.remove(rid)
+                job.status = QUARANTINED
+                self.stats["quarantined"] += 1
+
+    def _quarantine(self, job: SimJob):
+        g = self._group_for(self._scenario(job))
+        g.state = g._place(g.state.at[job.lane].set(jnp.uint32(0)))
+        g.slots[job.lane] = None
+        job.status, job.lane = QUARANTINED, -1
+        self.stats["quarantined"] += 1
+
+    def _restart_job(self, job: SimJob):
+        sc = self._scenario(job)
+        g = self._group_for(sc)
+        planes = sc.initial_planes()
+        g.state = g._place(g.state.at[job.lane].set(planes))
+        job.admitted_t = self.round * self.round_steps
+        job.steps_done = 0
+        job.frames.clear()
+
+    # ------------------------------------------------------------------
+    # Frames and retirement
+    # ------------------------------------------------------------------
+
+    def _stream_frames(self):
+        from repro.scenarios import observables
+        t = self.round * self.round_steps
+        for g in self.groups.values():
+            for job in g.live_jobs():
+                if not job.frame_every:
+                    continue
+                if job.steps_done % job.frame_every:
+                    continue
+                frame = observables.frame_summary(g.state[job.lane],
+                                                  g.spec, t)
+                frame["step"] = job.steps_done
+                job.frames[job.steps_done] = frame
+                self.frame_log.append({"rid": job.rid, "round": self.round,
+                                       "wall": time.perf_counter(),
+                                       "frame": frame})
+
+    def _retire(self):
+        for g in self.groups.values():
+            for lane, job in enumerate(g.slots):
+                if job is None or job.steps_done < job.steps:
+                    continue
+                first_finish = job.result is None
+                job.result = np.asarray(g.state[lane])
+                job.status = DONE
+                g.slots[lane] = None
+                job.lane = -1
+                g.state = g._place(g.state.at[lane].set(jnp.uint32(0)))
+                if first_finish:    # replays re-retire; count jobs once
+                    self.stats["jobs_done"] += 1
+
+    # ------------------------------------------------------------------
+    # Checkpoint / restore
+    # ------------------------------------------------------------------
+
+    def _meta(self) -> dict:
+        return {"round": self.round,
+                "engine": {"height": self.height, "width": self.width,
+                           "slots": self.slots, "depth": self.depth},
+                "groups": {k: {"variant": g.variant, "p_force": g.p_force}
+                           for k, g in self.groups.items()},
+                "jobs": [j.to_meta() for j in self.jobs.values()],
+                "queue": list(self.queue)}
+
+    def _checkpoint(self):
+        tree = {"groups": {k: g.state for k, g in self.groups.items()}}
+        path = store.save(self.ckpt_dir, self.round, tree,
+                          meta=self._meta(), overwrite=True)
+        if self.injector is not None:
+            self.injector.after_checkpoint(path, self.round)
+        self._gc_checkpoints()
+
+    def _gc_checkpoints(self):
+        steps = store._steps(self.ckpt_dir)
+        import shutil
+        for s in steps[:-self.keep]:
+            shutil.rmtree(store.step_dir(self.ckpt_dir, s),
+                          ignore_errors=True)
+
+    def _restore_from(self, step: int):
+        """Reset lattice states and job bookkeeping to checkpoint
+        ``step``; retry counters and detection logs survive on purpose
+        (they drive quarantine)."""
+        meta = store.load_meta(self.ckpt_dir, step)
+        target = {"groups": {k: g.state for k, g in self.groups.items()}}
+        shardings = None
+        if self.mesh is not None:
+            shardings = {"groups": {k: g.sharding
+                                    for k, g in self.groups.items()}}
+        restored = store.restore(self.ckpt_dir, step, target, shardings)
+        for k, g in self.groups.items():
+            g.state = restored["groups"][k]
+            g.slots = [None] * self.slots
+        self.round = meta["round"]
+        by_rid = {m["rid"]: m for m in meta["jobs"]}
+        self.queue.clear()
+        for rid in meta["queue"]:
+            self.queue.append(rid)
+        for rid, job in sorted(self.jobs.items()):
+            m = by_rid.get(rid)
+            if m is None:
+                # Submitted after the checkpoint: back to the queue.
+                job.status, job.lane = QUEUED, -1
+                job.steps_done = 0
+                job.frames.clear()
+                self.queue.append(rid)
+                continue
+            for k in ("status", "lane", "admitted_t", "steps_done",
+                      "expected", "with_momentum"):
+                setattr(job, k, m[k])
+            if job.status == RUNNING:
+                g = self.groups[self._job_group_key(rid)]
+                g.slots[job.lane] = job
+                # Replay re-streams frames past the anchor bit-exactly;
+                # stale ones (t beyond the anchor) are dropped.
+                job.frames = {s: f for s, f in job.frames.items()
+                              if s <= job.steps_done}
+
+    def _job_group_key(self, rid: int) -> str:
+        sc = self._scenario(self.jobs[rid])
+        return f"{sc.variant}|{sc.p_force}"
+
+    @classmethod
+    def resume(cls, ckpt_dir: str, *, mesh=None, injector=None,
+               **kw) -> "CAServeEngine":
+        """Rebuild a crashed engine from the last *valid* checkpoint in
+        ``ckpt_dir`` (torn/corrupt ones are skipped).  Jobs that were
+        queued resume queued; running jobs replay from the audited
+        anchor bit-exactly."""
+        step = store.latest_valid_step(ckpt_dir)
+        assert step is not None, f"no valid checkpoint under {ckpt_dir}"
+        meta = store.load_meta(ckpt_dir, step)
+        e = meta["engine"]
+        eng = cls(height=e["height"], width=e["width"], slots=e["slots"],
+                  depth=e["depth"], mesh=mesh, ckpt_dir=ckpt_dir,
+                  injector=injector, **kw)
+        for m in meta["jobs"]:
+            job = SimJob.from_meta(m)
+            eng.jobs[job.rid] = job
+        for k, ginfo in meta["groups"].items():
+            eng.groups[k] = _LaneGroup(eng, ginfo["variant"],
+                                       ginfo["p_force"])
+        target = {"groups": {k: g.state for k, g in eng.groups.items()}}
+        shardings = ({"groups": {k: g.sharding
+                                 for k, g in eng.groups.items()}}
+                     if mesh is not None else None)
+        restored = store.restore(ckpt_dir, step, target, shardings)
+        for k, g in eng.groups.items():
+            g.state = restored["groups"][k]
+        eng.round = meta["round"]
+        for rid in meta["queue"]:
+            eng.queue.append(rid)
+        for job in eng.jobs.values():
+            if job.status == RUNNING:
+                eng.groups[eng._job_group_key(job.rid)].slots[job.lane] = job
+        return eng

@@ -1,0 +1,225 @@
+"""Deterministic fault injection for the CA serve engine.
+
+Long SIMD/GPU runs hit silent corruption -- flipped bits in a resident
+lattice, a shard garbaged by a bad DMA, a checkpoint torn mid-write, a
+killed worker, a slow interconnect hop.  This module makes those failure
+modes *reproducible*: a :class:`Fault` names a kind, a firing round, and
+a seed; a :class:`FaultInjector` holds a schedule and fires each fault
+deterministically from its own counter-based RNG, so two runs with the
+same schedule corrupt the same bits in the same round -- which is what
+lets tests assert "every injected corruption was detected and the
+recovered run is bit-identical to a fault-free one".
+
+Kinds:
+
+* ``bitflip``         -- XOR ``bits`` random bits into one plane of one
+                         lane (mass changes by ±1 per bit: the minimal
+                         detectable corruption; an *odd* count is
+                         guaranteed to trip a popcount invariant, an
+                         even count can compensate -- schedules default
+                         to odd);
+* ``nan_shard``       -- fill a band of rows of one lane with the
+                         float32-NaN bit pattern ``0x7FC00000`` (a
+                         garbaged shard / bad DMA: gross corruption);
+* ``torn_checkpoint`` -- truncate one leaf ``.npy`` of the checkpoint
+                         just published (a crash mid-write; detected by
+                         ``latest_valid_step``'s checksum walk, never by
+                         the lattice audits);
+* ``killed_step``     -- raise :class:`SimulatedCrash` before the round
+                         runs (process death; recovery = resume from the
+                         last valid checkpoint);
+* ``slow_exchange``   -- sleep ``delay_s`` before the round (a straggler
+                         hop: hurts p99 frame latency, corrupts
+                         nothing).
+
+State-corrupting faults (``bitflip``, ``nan_shard``) fire **once** by
+default and are consumed: the rollback-replay of the same rounds then
+runs clean, exactly like a transient hardware fault.  ``sticky=True``
+re-fires on every replay -- a *persistent* fault -- which is what drives
+the engine's bounded-retry / quarantine path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+NAN_WORD = 0x7FC00000  # float32 quiet-NaN bit pattern, as a uint32 word
+
+STATE_KINDS = ("bitflip", "nan_shard")
+KINDS = STATE_KINDS + ("torn_checkpoint", "killed_step", "slow_exchange")
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by a ``killed_step`` fault: the engine process 'dies' here."""
+
+
+@dataclasses.dataclass
+class Fault:
+    """One scheduled fault.  ``round`` is the engine round index it fires
+    at (state faults fire after the round's compute, before the audit);
+    ``rule`` targets a lane group ("" = every live group is eligible,
+    the injector picks deterministically); ``lane`` the ensemble lane.
+    """
+
+    kind: str
+    round: int
+    rule: str = ""
+    lane: int = 0
+    plane: int = 0
+    bits: int = 1            # bitflip: how many bits to flip
+    rows: int = 2            # nan_shard: height of the garbaged band
+    delay_s: float = 0.0     # slow_exchange
+    sticky: bool = False     # re-fire on replay (persistent fault)
+    seed: int = 0
+    fired: int = 0           # times this fault has fired (bookkeeping)
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+
+    def _rng(self) -> np.random.Generator:
+        # Counter-based: the n-th firing of this fault draws the same
+        # positions every run (seed x kind x round x firing count).
+        return np.random.default_rng(
+            (self.seed, KINDS.index(self.kind), self.round, self.fired))
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One firing, for post-hoc matching against engine detections."""
+    kind: str
+    round: int
+    rule: str
+    lane: int
+    detail: dict
+
+
+class FaultInjector:
+    """Drives a fault schedule against the serve engine's hook points.
+
+    The engine calls ``before_round`` at the top of each round (crash /
+    straggler faults), ``corrupt`` on each group's post-step state
+    (state faults), and ``after_checkpoint`` on each published
+    checkpoint path (torn-write faults).  ``events`` records every
+    firing; ``consumed`` one-shot faults never re-fire, so replayed
+    rounds run clean."""
+
+    def __init__(self, schedule: Sequence[Fault]):
+        self.schedule: List[Fault] = list(schedule)
+        self.events: List[FaultEvent] = []
+
+    def _due(self, kinds: Tuple[str, ...], rnd: int,
+             rule: Optional[str] = None) -> List[Fault]:
+        out = []
+        for f in self.schedule:
+            if f.kind not in kinds or f.round != rnd:
+                continue
+            if f.fired and not f.sticky:
+                continue
+            if rule is not None and f.rule and f.rule != rule:
+                continue
+            out.append(f)
+        return out
+
+    def before_round(self, rnd: int) -> None:
+        for f in self._due(("slow_exchange",), rnd):
+            f.fired += 1
+            self.events.append(FaultEvent(f.kind, rnd, f.rule, f.lane,
+                                          {"delay_s": f.delay_s}))
+            time.sleep(f.delay_s)
+        for f in self._due(("killed_step",), rnd):
+            f.fired += 1
+            self.events.append(FaultEvent(f.kind, rnd, f.rule, f.lane, {}))
+            raise SimulatedCrash(f"killed_step fault at round {rnd}")
+
+    def corrupt(self, state: np.ndarray, rule: str, rnd: int) -> np.ndarray:
+        """Apply this round's state faults for ``rule`` to a host copy of
+        the ``(B, n_planes, H, Wd)`` uint32 lane stack; returns the
+        (possibly) corrupted array."""
+        faults = self._due(STATE_KINDS, rnd, rule=rule)
+        if not faults:
+            return state
+        state = np.array(state, copy=True)
+        b, n_planes, h, wd = state.shape[-4:]
+        for f in faults:
+            rng = f._rng()
+            lane = f.lane % b
+            plane = f.plane % n_planes
+            if f.kind == "bitflip":
+                detail = {"plane": plane, "positions": []}
+                for _ in range(f.bits):
+                    y = int(rng.integers(h))
+                    xw = int(rng.integers(wd))
+                    bit = int(rng.integers(32))
+                    state[..., lane, plane, y, xw] ^= np.uint32(1 << bit)
+                    detail["positions"].append([y, xw, bit])
+            else:  # nan_shard
+                r0 = int(rng.integers(max(h - f.rows, 1)))
+                state[..., lane, plane, r0:r0 + f.rows, :] = \
+                    np.uint32(NAN_WORD)
+                detail = {"plane": plane, "rows": [r0, r0 + f.rows]}
+            f.fired += 1
+            self.events.append(FaultEvent(f.kind, rnd, rule, lane, detail))
+        return state
+
+    def after_checkpoint(self, path: str, rnd: int) -> None:
+        """Tear the checkpoint just published at ``path``: truncate one
+        leaf file to half its bytes (the crash-mid-write failure mode --
+        the manifest is already on disk, so only the per-leaf checksum
+        walk can tell)."""
+        for f in self._due(("torn_checkpoint",), rnd):
+            leaves = sorted(fn for fn in os.listdir(path)
+                            if fn.endswith(".npy"))
+            if not leaves:
+                continue
+            victim = leaves[int(f._rng().integers(len(leaves)))]
+            fp = os.path.join(path, victim)
+            size = os.path.getsize(fp)
+            with open(fp, "r+b") as fh:
+                fh.truncate(max(size // 2, 1))
+            f.fired += 1
+            self.events.append(FaultEvent(f.kind, rnd, f.rule, f.lane,
+                                          {"file": victim,
+                                           "truncated_to": size // 2}))
+
+    def corruption_events(self) -> List[FaultEvent]:
+        """Firings the lattice audits are expected to detect (state
+        faults only -- torn checkpoints surface at rollback, crashes and
+        stragglers are not corruption)."""
+        return [e for e in self.events if e.kind in STATE_KINDS]
+
+
+def make_schedule(seed: int, rounds: int, *, rules: Sequence[str] = ("",),
+                  n_bitflip: int = 1, n_nan: int = 1, n_torn: int = 0,
+                  n_kill: int = 0, n_slow: int = 0,
+                  delay_s: float = 0.002, lanes: int = 1,
+                  first_round: int = 1) -> List[Fault]:
+    """A reproducible random schedule over ``rounds`` engine rounds:
+    the bench's synthetic fault load.  Faults land in
+    ``[first_round, rounds)`` at seeded positions; one-shot (transient)
+    by construction."""
+    rng = np.random.default_rng(seed)
+    out: List[Fault] = []
+    span = max(rounds - first_round, 1)
+
+    def rounds_for(n):
+        return sorted(first_round + int(r)
+                      for r in rng.choice(span, size=n, replace=False)) \
+            if n <= span else [first_round + int(rng.integers(span))
+                               for _ in range(n)]
+
+    for kind, n in (("bitflip", n_bitflip), ("nan_shard", n_nan),
+                    ("torn_checkpoint", n_torn), ("killed_step", n_kill),
+                    ("slow_exchange", n_slow)):
+        for r in rounds_for(n):
+            rule = rules[int(rng.integers(len(rules)))]
+            out.append(Fault(kind=kind, round=r, rule=rule,
+                             lane=int(rng.integers(lanes)),
+                             plane=int(rng.integers(8)),
+                             bits=1 + 2 * int(rng.integers(2)),
+                             delay_s=delay_s,
+                             seed=int(rng.integers(2**31))))
+    return sorted(out, key=lambda f: (f.round, f.kind))

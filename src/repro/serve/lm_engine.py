@@ -1,0 +1,137 @@
+"""Batched serving engine: slot-based continuous batching over a fixed
+decode batch.
+
+The engine keeps ``batch_size`` decode slots.  Incoming requests are
+prefill'd one at a time (prefill is jit'd per prompt-length bucket) and
+their caches written into a free slot; every ``step()`` advances all live
+slots by one token with the single jit'd batched ``decode_step``.
+Finished requests (EOS or max-new-tokens) free their slot for the queue.
+
+This is deliberately the *structure* of a production server (vLLM-style
+slots + batched decode) at a size that runs on CPU in tests; the dry-run
+lowers the same ``decode_step`` at the assigned (batch, seq) shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int = 16
+    eos: int = -1                   # -1: never stop early
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg, batch_size: int, max_len: int,
+                 cache_dtype=jnp.float32, greedy: bool = True,
+                 temperature: float = 1.0, top_k: int = 0, seed: int = 0):
+        self.params, self.cfg = params, cfg
+        self.bs, self.max_len = batch_size, max_len
+        self.greedy = greedy
+        self.temperature, self.top_k = temperature, top_k
+        self._rng = np.random.default_rng(seed)
+        self.cache = init_cache(cfg, batch_size, max_len, cache_dtype)
+        self.cache_dtype = cache_dtype
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.pos = np.zeros(batch_size, np.int32)     # next write position
+        self.last_tok = np.zeros(batch_size, np.int32)
+        self.queue: deque = deque()
+        self.finished: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, max_len=max_len,
+                                 cache_dtype=cache_dtype),
+            static_argnums=())
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _write_slot_cache(self, slot: int, src_cache):
+        """Copy a single-request prefill cache into batch slot ``slot``.
+
+        Cache leaves carry the batch dim wherever their family puts it
+        (axis 1 for (layers, B, ...) stacks, axis 2 for zamba2's
+        (groups, period, B, ...) ssm states); it is identified as the axis
+        where dst extent == batch_size and src extent == 1-request."""
+        def assign(dst, src):
+            axis = next(a for a in range(dst.ndim)
+                        if dst.shape[a] == self.bs and src.shape[a] == 1
+                        and dst.shape[:a] == src.shape[:a])
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=axis)
+        self.cache = jax.tree.map(assign, self.cache, src_cache)
+
+    def _select(self, logits_row: np.ndarray) -> int:
+        """Greedy argmax or temperature/top-k sampling."""
+        if self.greedy:
+            return int(np.argmax(logits_row))
+        lg = logits_row.astype(np.float64) / max(self.temperature, 1e-6)
+        if self.top_k:
+            kth = np.partition(lg, -self.top_k)[-self.top_k]
+            lg = np.where(lg >= kth, lg, -np.inf)
+        p = np.exp(lg - lg.max())
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    def _fill_free_slots(self):
+        for i in range(self.bs):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+                if self.cfg.frontend == "frames":
+                    batch["frames"] = jnp.zeros(
+                        (1, len(req.prompt), self.cfg.d_model), jnp.float32)
+                last_logits, rcache = self._prefill(self.params, batch)
+                self._write_slot_cache(i, rcache)
+                tok = self._select(np.asarray(last_logits[0]))
+                req.out.append(tok)
+                self.slots[i] = req
+                self.pos[i] = len(req.prompt)
+                self.last_tok[i] = tok
+
+    def step(self) -> int:
+        """One batched decode step over all live slots (per-row positions);
+        returns the number of live slots advanced."""
+        self._fill_free_slots()
+        live = [i for i in range(self.bs) if self.slots[i] is not None]
+        if not live:
+            return 0
+        toks = jnp.asarray(self.last_tok)
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        lg = np.asarray(logits)
+        for i in live:
+            tok = self._select(lg[i])
+            req = self.slots[i]
+            req.out.append(tok)
+            self.last_tok[i] = tok
+            self.pos[i] += 1
+            if (tok == req.eos or len(req.out) >= req.max_new
+                    or self.pos[i] >= self.max_len - 1):
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+                self.pos[i] = 0
+        return len(live)
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

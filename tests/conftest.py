@@ -16,7 +16,7 @@ _TIER1_MODULES = {
     "test_substrate", "test_fhp3", "test_equivalence", "test_kernels",
     "test_temporal", "test_sharded_pallas", "test_geometry",
     "test_scenarios", "test_xblock", "test_rule_conformance",
-    "test_overlap",
+    "test_overlap", "test_checkpoint", "test_faults", "test_serve",
 }
 
 

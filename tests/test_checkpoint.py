@@ -1,0 +1,216 @@
+"""Checkpoint store hardening: crash-safe publish, typed restore
+errors, per-leaf checksums, and the ``latest_valid_step`` fallback the
+serve layer's rollback anchors on."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointError, CheckpointExistsError,
+                              CheckpointManager, ChecksumError,
+                              LeafMismatchError, ManifestError,
+                              latest_step, latest_valid_step, load_meta,
+                              restore, save, verify_checkpoint)
+from repro.checkpoint import store
+
+
+def _tree(seed=0, shape=(4, 8)):
+    rng = np.random.default_rng(seed)
+    return {"a": rng.integers(0, 2**31, shape).astype(np.uint32),
+            "b": {"c": rng.standard_normal(shape).astype(np.float32)}}
+
+
+def _assert_tree_equal(x, y):
+    assert np.array_equal(np.asarray(x["a"]), np.asarray(y["a"]))
+    assert np.array_equal(np.asarray(x["b"]["c"]), np.asarray(y["b"]["c"]))
+
+
+def test_roundtrip_with_meta(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    save(d, 3, t, meta={"rule": "fhp3", "t": 6})
+    assert latest_step(d) == 3
+    assert load_meta(d, 3) == {"rule": "fhp3", "t": 6}
+    _assert_tree_equal(restore(d, 3, _tree(seed=1)), t)
+
+
+def test_save_refuses_overwrite_by_default(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    save(d, 1, t)
+    with pytest.raises(CheckpointExistsError):
+        save(d, 1, _tree(seed=9))
+    # The published copy is untouched and no temp litter remains.
+    _assert_tree_equal(restore(d, 1, t), t)
+    assert not [f for f in os.listdir(d) if f.startswith("tmp_")]
+
+
+def test_save_overwrite_swaps_without_destroy_window(tmp_path):
+    """overwrite=True replaces via unique renames: the old copy is moved
+    aside (not rmtree'd in place) before the new one is published, so no
+    instant has zero complete checkpoints on disk."""
+    d = str(tmp_path)
+    save(d, 1, _tree(seed=0))
+    t2 = _tree(seed=2)
+    save(d, 1, t2, overwrite=True)
+    _assert_tree_equal(restore(d, 1, _tree(seed=3)), t2)
+    assert not [f for f in os.listdir(d) if ".old." in f or
+                f.startswith("tmp_")]
+
+
+def test_restore_typed_shape_mismatch(tmp_path):
+    d = str(tmp_path)
+    save(d, 1, _tree(shape=(4, 8)))
+    with pytest.raises(LeafMismatchError) as ei:
+        restore(d, 1, _tree(shape=(4, 16)))
+    assert ei.value.key == "a"
+    assert ei.value.expected == (4, 16) and ei.value.found == (4, 8)
+
+
+def test_restore_typed_structure_mismatch(tmp_path):
+    d = str(tmp_path)
+    save(d, 1, _tree())
+    with pytest.raises(LeafMismatchError):
+        restore(d, 1, {"a": _tree()["a"]})  # leaf count disagrees
+    with pytest.raises(LeafMismatchError) as ei:
+        restore(d, 1, {"a": _tree()["a"],
+                       "z": {"c": _tree()["b"]["c"]}})  # renamed subtree
+    assert ei.value.key is not None
+
+
+def test_restore_checksum_mismatch(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    path = save(d, 1, t)
+    # Corrupt one payload byte without touching shape/dtype metadata.
+    fn = os.path.join(path, "a.npy")
+    raw = bytearray(open(fn, "rb").read())
+    raw[-1] ^= 0xFF
+    open(fn, "wb").write(bytes(raw))
+    with pytest.raises(ChecksumError) as ei:
+        restore(d, 1, _tree(seed=1))
+    assert ei.value.key == "a"
+    # check=False skips the crc walk (escape hatch for forensics).
+    out = restore(d, 1, _tree(seed=1), check=False)
+    assert not np.array_equal(out["a"], t["a"])
+
+
+def test_manifest_error_on_garbled_manifest(tmp_path):
+    d = str(tmp_path)
+    path = save(d, 1, _tree())
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        f.write('{"step": 1, "leav')       # torn mid-write
+    with pytest.raises(ManifestError):
+        verify_checkpoint(d, 1)
+    with pytest.raises(ManifestError):
+        restore(d, 1, _tree())
+
+
+def test_latest_valid_step_skips_torn_and_corrupt(tmp_path):
+    """The rollback anchor: newest checkpoint wins only if it verifies;
+    truncated leaves, checksum garbage, and torn manifests all fall
+    through to the previous good step."""
+    d = str(tmp_path)
+    for s in (2, 4, 6, 8):
+        save(d, s, _tree(seed=s))
+    assert latest_valid_step(d) == 8
+
+    # step 8: truncated .npy (crash mid-write)
+    fn = os.path.join(store.step_dir(d, 8), "a.npy")
+    size = os.path.getsize(fn)
+    with open(fn, "r+b") as fh:
+        fh.truncate(size // 2)
+    assert latest_valid_step(d) == 6
+
+    # step 6: bytes garbled in place (crc catches it)
+    fn = os.path.join(store.step_dir(d, 6), "b_c.npy")
+    raw = bytearray(open(fn, "rb").read())
+    raw[-4] ^= 0x55
+    open(fn, "wb").write(bytes(raw))
+    assert latest_valid_step(d) == 4
+
+    # step 4: garbled manifest
+    with open(os.path.join(store.step_dir(d, 4), "manifest.json"),
+              "w") as f:
+        f.write("not json")
+    assert latest_valid_step(d) == 2
+    verify_checkpoint(d, 2)          # the survivor really is clean
+    _assert_tree_equal(restore(d, 2, _tree(seed=0)), _tree(seed=2))
+
+
+def test_latest_valid_step_empty_and_all_bad(tmp_path):
+    d = str(tmp_path)
+    assert latest_valid_step(d) is None
+    path = save(d, 1, _tree())
+    os.remove(os.path.join(path, "manifest.json"))
+    assert latest_valid_step(d) is None
+
+
+def test_manager_wait_drains_errors(tmp_path):
+    """A failed async save surfaces exactly once: wait() raises the
+    worker error and clears the list, so the next wait() is clean."""
+    d = str(tmp_path)
+    m = CheckpointManager(d, overwrite=False)
+    m.save_async(1, _tree())
+    m.wait()
+    m.save_async(1, _tree(seed=2))       # refused: step already published
+    with pytest.raises(CheckpointExistsError):
+        m.wait()
+    m.save_async(2, _tree(seed=2))       # recovery continues cleanly
+    m.wait()
+    assert latest_valid_step(d) == 2
+    m.close()
+
+
+def test_manager_close_drains_pending_and_rejects_late(tmp_path):
+    d = str(tmp_path)
+    m = CheckpointManager(d, keep=10)
+    for s in range(1, 6):
+        m.save_async(s, _tree(seed=s))
+    m.close()                            # must flush all five, then stop
+    assert store._steps(d) == [1, 2, 3, 4, 5]
+    with pytest.raises(RuntimeError):
+        m.save_async(6, _tree())
+    m.close()                            # idempotent
+
+
+def test_manager_close_race_never_drops_a_save(tmp_path):
+    """save_async racing close(): every call either lands on disk or
+    raises -- no silent drop behind the shutdown sentinel."""
+    d = str(tmp_path)
+    m = CheckpointManager(d, keep=100)
+    accepted, rejected = [], []
+    barrier = threading.Barrier(3)
+
+    def submit(base):
+        barrier.wait()
+        for i in range(20):
+            s = base + i
+            try:
+                m.save_async(s, {"x": np.full((2,), s, np.int64)})
+                accepted.append(s)
+            except RuntimeError:
+                rejected.append(s)
+
+    threads = [threading.Thread(target=submit, args=(b,))
+               for b in (100, 200)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    m.close()
+    for t in threads:
+        t.join()
+    on_disk = set(store._steps(d))
+    assert on_disk == set(accepted)
+    assert on_disk.isdisjoint(rejected)
+
+
+def test_manager_retention_gc(tmp_path):
+    d = str(tmp_path)
+    m = CheckpointManager(d, keep=2)
+    for s in range(1, 6):
+        m.save_async(s, _tree(seed=s))
+    m.close()
+    assert store._steps(d) == [4, 5]

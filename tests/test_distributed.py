@@ -1,5 +1,6 @@
 """Distributed FHP == single-device reference (bit-exact), run in a
 subprocess so the 8 fake host devices never leak into other tests."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -54,7 +55,6 @@ SCRIPT = textwrap.dedent("""
 def test_distributed_matches_single_device():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=dict(os.environ, PYTHONPATH="src"))
     assert r.returncode == 0, r.stdout + r.stderr
     assert "ALL_OK" in r.stdout

@@ -9,8 +9,10 @@ import tempfile
 
 import pytest
 
-ENV = {"PYTHONPATH": "src", "DRYRUN_DEVICES": "8",
-       "PATH": "/usr/bin:/bin", "HOME": "/root"}
+# Inherit the parent env (platform pins like JAX_PLATFORMS must reach
+# the child -- a stripped env leaves jax polling for an accelerator);
+# the dry-run knobs are the only overrides.
+ENV = dict(os.environ, PYTHONPATH="src", DRYRUN_DEVICES="8")
 
 
 def run_cell(args, timeout=600):

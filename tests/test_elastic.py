@@ -1,6 +1,7 @@
 """Elastic re-scale: a checkpoint written under one mesh restores onto a
 different mesh (different DP extent) and training continues with
 identical results — the restart path for losing/gaining nodes."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -71,8 +72,7 @@ SCRIPT = textwrap.dedent("""
 def test_elastic_mesh_rescale():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        capture_output=True, text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=dict(os.environ, PYTHONPATH="src"))
     assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
     assert "ELASTIC_OK" in r.stdout
 
@@ -131,7 +131,77 @@ def test_ca_checkpoint_rule_roundtrip():
     ``t`` reproduces the uninterrupted stream)."""
     r = subprocess.run([sys.executable, "-c", CA_SCRIPT],
                        capture_output=True, text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=dict(os.environ, PYTHONPATH="src"))
     assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
     assert "CA_ELASTIC_OK" in r.stdout
+
+
+CA_CORRUPT_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding
+    from repro import checkpoint as ckpt
+    from repro.core import bitplane, distributed, rulespec
+
+    name, H, W = "fhp3", 32, 256
+    spec = rulespec.get_rule(name)
+    planes = bitplane.pack(jnp.asarray(spec.init_bytes(H, W, 0.3, 9)),
+                           n_planes=spec.n_planes)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    sh = NamedSharding(mesh, distributed.lattice_spec(("data",), "model"))
+    run = jax.jit(distributed.make_run(
+        mesh, 4, y_axes=("data",), x_axis="model", depth=2,
+        use_pallas=True, steps_per_launch=2, variant=name))
+
+    with tempfile.TemporaryDirectory() as d:
+        state = jax.device_put(planes, sh)
+        # Checkpoint every 4 steps up to t=12.
+        for t in (0, 4, 8):
+            ckpt.save(d, t + 4, {"planes": run(state, t)},
+                      meta={"rule": name, "t": t + 4})
+            state = run(state, t)
+        assert ckpt.latest_step(d) == 12
+
+        # The newest checkpoint is torn (truncated leaf), the one before
+        # it has a garbled payload byte: the restart anchor must fall
+        # back to t=4 via the checksum walk.
+        p12 = ckpt.store.step_dir(d, 12)
+        leaf = [f for f in os.listdir(p12) if f.endswith(".npy")][0]
+        fp = os.path.join(p12, leaf)
+        with open(fp, "r+b") as fh:
+            fh.truncate(os.path.getsize(fp) // 2)
+        p8 = ckpt.store.step_dir(d, 8)
+        leaf = [f for f in os.listdir(p8) if f.endswith(".npy")][0]
+        fp = os.path.join(p8, leaf)
+        raw = bytearray(open(fp, "rb").read()); raw[-1] ^= 0xAA
+        open(fp, "wb").write(bytes(raw))
+
+        anchor = ckpt.latest_valid_step(d)
+        assert anchor == 4, anchor
+        meta = ckpt.load_meta(d, anchor)
+        restored = ckpt.restore(d, anchor, {"planes": planes},
+                                {"planes": sh})
+        out = restored["planes"]
+        # Replay 12 - 4 = 8 steps from the anchor: bit-exact catch-up.
+        for t in range(meta["t"], 12, 4):
+            out = run(out, t)
+
+    want = rulespec.run_planes_rule(planes, 12, spec)
+    assert bool((np.asarray(out) == np.asarray(want)).all())
+    print("CA_CORRUPT_FALLBACK_OK")
+""")
+
+
+@pytest.mark.slow
+def test_ca_corrupted_checkpoint_fallback_replay():
+    """Disk corruption on the restart path: the newest checkpoint is
+    torn and the next is checksum-garbled, so ``latest_valid_step``
+    falls back two intervals, and the sharded fhp3 replay from that
+    anchor is bit-exact with the uninterrupted run (counter-based RNG:
+    replaying [t_anchor, t) reproduces the identical stream)."""
+    r = subprocess.run([sys.executable, "-c", CA_CORRUPT_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env=dict(os.environ, PYTHONPATH="src"))
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "CA_CORRUPT_FALLBACK_OK" in r.stdout

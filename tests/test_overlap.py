@@ -19,6 +19,7 @@ for static-solid geometry, batched lanes, and a degenerate shard
 (depth = hl/2 so the bands cover the shard), all vs the single-device
 reference.
 """
+import os
 import subprocess
 import sys
 import textwrap
@@ -333,7 +334,6 @@ MESH_SCRIPT = textwrap.dedent("""
 def test_overlap_mesh_static_batched_degenerate():
     r = subprocess.run([sys.executable, "-c", MESH_SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=dict(os.environ, PYTHONPATH="src"))
     assert r.returncode == 0, r.stdout + r.stderr
     assert "ALL_OK" in r.stdout

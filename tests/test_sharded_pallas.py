@@ -13,6 +13,7 @@ Three layers of proof:
   host devices never leak into other tests), depth in {1, 2, 4} x
   T in {1, 2, d}, plus a 3-axis mesh and a batched-ensemble case.
 """
+import os
 import subprocess
 import sys
 import textwrap
@@ -275,8 +276,7 @@ SCRIPT = textwrap.dedent("""
 def test_sharded_pallas_matches_single_device():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        capture_output=True, text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=dict(os.environ, PYTHONPATH="src"))
     assert r.returncode == 0, r.stdout + r.stderr
     assert "ALL_OK" in r.stdout
 
@@ -323,7 +323,6 @@ def test_sharded_pallas_rule_variants():
     threading through ``distributed`` is load-bearing for every rule)."""
     r = subprocess.run([sys.executable, "-c", RULE_SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=dict(os.environ, PYTHONPATH="src"))
     assert r.returncode == 0, r.stdout + r.stderr
     assert "ALL_OK" in r.stdout
