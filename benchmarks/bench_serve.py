@@ -47,6 +47,7 @@ SCRIPT = textwrap.dedent("""
     import jax
     from repro.serve import (CAServeEngine, FaultInjector, SimJob,
                              make_schedule)
+    from repro.telemetry import Telemetry
 
     H, W = (16, 128) if smoke else (32, 256)
     slots, jobs, steps = (2, 4, 12) if smoke else (4, 8, 24)
@@ -54,11 +55,15 @@ SCRIPT = textwrap.dedent("""
     mesh = None if smoke else jax.make_mesh((2, 2), ("data", "model"))
 
     def run_profile(injector, ckpt_dir):
+        # Private telemetry per profile: spans/counters isolated, JSONL
+        # sink next to the checkpoints (fsynced on fault events).
+        tel = Telemetry(enabled=True,
+                        jsonl_path=ckpt_dir + "/telemetry.jsonl")
         eng = CAServeEngine(height=H, width=W, slots=slots, depth=depth,
                             mesh=mesh, use_pallas=not smoke,
                             steps_per_launch=depth if mesh else None,
                             ckpt_dir=ckpt_dir, ckpt_every=2,
-                            injector=injector)
+                            injector=injector, telemetry=tel)
         for rid in range(jobs):
             sc = "bml_city" if rid % 2 else "cylinder"
             eng.submit(SimJob(rid=rid, scenario=sc, steps=steps,
@@ -115,7 +120,8 @@ SCRIPT = textwrap.dedent("""
                "rounds": eng.stats["rounds"],
                "jobs_per_sec": len(done) / dt,
                "frames": len(eng.frame_log),
-               "frame_lat_p50_s": p50, "frame_lat_p99_s": p99}
+               "frame_lat_p50_s": p50, "frame_lat_p99_s": p99,
+               "metrics": eng.metrics()}
         if label == "faulted":
             # The deterministic recovery tax is the replayed-steps
             # fraction of the productive work; the wall delta is kept as

@@ -32,6 +32,12 @@
 # without a seeded fault schedule and *asserts bit-exact recovery*
 # before emitting records, and the JSON check below asserts the serve
 # headline (jobs/s + p99 frame latency + recovery overhead) is present.
+# The observability gate: bench_observables asserts the in-kernel fused
+# moments are bit-identical to the post-hoc popcount path and emits the
+# fused-vs-posthoc timing; the JSON check asserts the bit_exact flag,
+# that the disabled-telemetry no-op cost stays a negligible fraction of
+# a CA step, and that both serve profiles carry a metrics block (rounds
+# / audits / rollbacks plus per-span p50/p99 from the telemetry rollup).
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -65,6 +71,32 @@ assert all(r.get("overlap_speedup_modeled") is not None
            for r in paired), "overlap pair missing modeled/measured ratio"
 assert hl.get("overlap_speedup_modeled"), "headline overlap ratio missing"
 
+obs = [r for r in d["records"] if r.get("bench") == "observables"]
+fused = [r for r in obs if r.get("impl") == "pallas-fused-moments"]
+assert fused, "no fused-moments observables record"
+assert all(r.get("bit_exact") for r in fused), \
+    "fused moments not bit-exact vs post-hoc popcounts"
+assert all(r.get("fused_vs_posthoc_speedup") for r in fused), \
+    "fused-vs-posthoc timing missing"
+noop = [r for r in obs if r.get("impl") == "telemetry-noop"]
+assert noop, "no telemetry no-op record"
+assert all(r.get("telemetry_overhead_frac") is not None
+           and r["telemetry_overhead_frac"] < 0.05 for r in noop), \
+    "disabled-telemetry overhead not negligible"
+
+serve_recs = [r for r in d["records"] if r.get("bench") == "serve"]
+assert serve_recs, "no serve records"
+for r in serve_recs:
+    m = r.get("metrics")
+    assert m and m.get("rounds") and m.get("audits"), \
+        f"serve {r.get('profile')} record missing metrics block"
+    for k in ("rollbacks", "quarantined", "audit_failures"):
+        assert k in m, f"serve metrics block missing {k!r}"
+    spans = (m.get("telemetry") or {}).get("spans") or {}
+    rnd = spans.get("serve.round")
+    assert rnd and "p50_s" in rnd and "p99_s" in rnd, \
+        f"serve {r.get('profile')} metrics missing serve.round p50/p99"
+
 srv = hl.get("serve")
 assert srv, "serve headline missing"
 assert srv.get("jobs_per_sec"), "serve headline has no throughput"
@@ -77,5 +109,7 @@ assert srv.get("rollbacks", 0) >= 1, "faulted serve profile never rolled back"
 print("BENCH_kernel.json gate: headline + 2-D x-block + bml_city + "
       f"{len(pairs)} overlap pair(s) + serve "
       f"(recovery {srv['recovery_overhead_pct']:.1f}%, "
-      f"{srv['rollbacks']} rollback(s)) present")
+      f"{srv['rollbacks']} rollback(s)) + observables "
+      f"(fused x{fused[0]['fused_vs_posthoc_speedup']:.2f} bit-exact, "
+      f"telemetry noop {noop[0]['telemetry_noop_ns']:.0f}ns) present")
 EOF

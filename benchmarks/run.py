@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run            # full sweep
     PYTHONPATH=src python -m benchmarks.run --smoke    # tiny CI profile
+    PYTHONPATH=src python -m benchmarks.run --smoke --profile  # + tracing
 
 Table 1  -> bench_table1  (Mups per implementation tier)
 Fig. 9   -> bench_fig9    (speedup over sequential analogue + v5e projection)
@@ -14,6 +15,16 @@ scenarios -> bench_scenarios (registered geometries through the sharded
 serve    -> bench_serve   (continuous-batching job engine under open-loop
              load, with/without seeded faults; jobs/s, frame latency
              percentiles, recovery overhead, bit-exact recovery gate)
+observables -> bench_observables (in-kernel fused moments vs post-hoc
+             re-streaming, bit-exactness gate; disabled-telemetry no-op
+             cost)
+
+``--profile`` turns the telemetry layer on for the sweep (JSONL sink
+``BENCH_telemetry.jsonl``, summary appended to the output JSON) and
+wraps the record-producing benches in ``jax.profiler.trace`` writing to
+``bench_trace/`` -- the ``telemetry.span`` names land on the HLO via
+``jax.named_scope``, so kernel/exchange/boundary regions are findable
+in the trace viewer.
 
 The kernel-shaped benches (kernel, temporal, distributed) also return
 machine-readable records; this driver persists them to
@@ -90,9 +101,21 @@ def _headline(records):
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     smoke = "--smoke" in argv
+    profile = "--profile" in argv
     from benchmarks import (bench_distributed, bench_fig9, bench_fig10,
-                            bench_kernel, bench_scenarios, bench_serve,
-                            bench_table1, bench_temporal)
+                            bench_kernel, bench_observables,
+                            bench_scenarios, bench_serve, bench_table1,
+                            bench_temporal)
+    import contextlib
+
+    import jax
+
+    from repro import telemetry
+    trace_ctx = contextlib.nullcontext()
+    if profile:
+        telemetry.configure(enabled=True,
+                            jsonl_path="BENCH_telemetry.jsonl")
+        trace_ctx = jax.profiler.trace("bench_trace")
     records = []
     paper_benches = [] if smoke else [
         ("table1", bench_table1), ("fig9", bench_fig9),
@@ -102,16 +125,17 @@ def main(argv=None) -> None:
         t0 = time.time()
         mod.main()
         print(f"-- {name} done in {time.time() - t0:.1f}s --\n")
-    for name, mod in [("kernel", bench_kernel), ("temporal", bench_temporal),
-                      ("distributed", bench_distributed),
-                      ("scenarios", bench_scenarios),
-                      ("serve", bench_serve)]:
-        print(f"== {name} ==")
-        t0 = time.time()
-        records.extend(mod.main(smoke=smoke or None) or [])
-        print(f"-- {name} done in {time.time() - t0:.1f}s --\n")
-
-    import jax
+    with trace_ctx:
+        for name, mod in [("kernel", bench_kernel),
+                          ("temporal", bench_temporal),
+                          ("distributed", bench_distributed),
+                          ("scenarios", bench_scenarios),
+                          ("serve", bench_serve),
+                          ("observables", bench_observables)]:
+            print(f"== {name} ==")
+            t0 = time.time()
+            records.extend(mod.main(smoke=smoke or None) or [])
+            print(f"-- {name} done in {time.time() - t0:.1f}s --\n")
     # bench_temporal auto-degrades to the smoke profile on non-TPU
     # backends even without --smoke, so the per-record "smoke"/"lattice"
     # fields are authoritative; meta only records what was requested.
@@ -123,6 +147,9 @@ def main(argv=None) -> None:
                         sorted({bool(r.get("smoke")) for r in records})},
            "headline": _headline(records),
            "records": records}
+    if profile:
+        out["telemetry"] = telemetry.summary()
+        telemetry.default().flush()
     with open(BENCH_JSON, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {len(records)} records -> {BENCH_JSON}")

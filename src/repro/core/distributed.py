@@ -47,6 +47,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import prng, rulespec
+from repro import telemetry
 
 Axes = Union[str, Tuple[str, ...]]
 
@@ -96,12 +97,13 @@ def _exchange_halo(planes, d: int, ny: int, nx: int, y_axes: Axes,
                    x_axis: str):
     """x halo first (one word each side), then y halo on the x-extended
     array -- the corner words ride along with the y rows."""
-    left = lax.ppermute(planes[..., -1:], x_axis, _ring(nx, up=True))
-    right = lax.ppermute(planes[..., :1], x_axis, _ring(nx, up=False))
-    ext = jnp.concatenate([left, planes, right], axis=-1)
-    top = lax.ppermute(ext[..., -d:, :], y_axes, _ring(ny, up=True))
-    bot = lax.ppermute(ext[..., :d, :], y_axes, _ring(ny, up=False))
-    return jnp.concatenate([top, ext, bot], axis=-2)
+    with telemetry.span("exchange", depth=d):
+        left = lax.ppermute(planes[..., -1:], x_axis, _ring(nx, up=True))
+        right = lax.ppermute(planes[..., :1], x_axis, _ring(nx, up=False))
+        ext = jnp.concatenate([left, planes, right], axis=-1)
+        top = lax.ppermute(ext[..., -d:, :], y_axes, _ring(ny, up=True))
+        bot = lax.ppermute(ext[..., :d, :], y_axes, _ring(ny, up=False))
+        return jnp.concatenate([top, ext, bot], axis=-2)
 
 
 def make_solid_cache(mesh, *, y_axes: Axes = ("data",),
@@ -134,7 +136,8 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                          block_rows: int = 0, block_words: int = 0,
                          static_solid: bool = False,
                          overlap: bool = False,
-                         variant: str = "fhp2"):
+                         variant: str = "fhp2",
+                         moments_every: int = 0):
     """Build ``step(planes, t) -> planes`` advancing ``depth`` global CA
     steps per halo exchange under ``shard_map``.
 
@@ -188,6 +191,15 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
     depth).  Each round then exchanges 7 planes instead of 8; batched
     lanes share the one geometry.
 
+    ``moments_every`` = k > 0 (k must divide ``depth``) makes the stepper
+    return ``(planes, moments)``: per-shard partial ``MomentSpec``
+    reductions recorded in-kernel every k-th step of the round (the jnp
+    fallback computes them post-step on the owned slice, bit-identically)
+    and ``psum``'d over every mesh axis, so each device holds the
+    replicated global ``(..., depth // k, n_moments)`` int32 time series.
+    The layout is ``moment_spec(rule)`` -- with ``static_solid`` the
+    7-plane stack drops the ``solid`` row (``stack_planes = n_planes-1``).
+
     The returned function is shard_map'ed but not jitted; callers compose it
     (e.g. ``lax.fori_loop`` over exchanges) and jit the whole program.
     """
@@ -199,8 +211,16 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
         f"rule {variant!r} has no solid plane: static_solid unavailable"
     assert p_force == 0.0 or rule.force is not None, \
         f"rule {variant!r} has no force pass: p_force must be 0"
+    k = int(moments_every)
+    assert k == 0 or depth % k == 0, \
+        f"moments_every={k} must divide depth={depth} (static cadence)"
+    if k:
+        mspec = rulespec.moment_spec(
+            rule, stack_planes=rule.n_planes - 1 if static_solid else None)
     spec = lattice_spec(y_axes, x_axis, batched=batched)
     ny, nx = _mesh_size(mesh, y_axes), _mesh_size(mesh, x_axis)
+    psum_axes = ((y_axes,) if isinstance(y_axes, str) else tuple(y_axes)) \
+        + (x_axis,)
 
     def chunk(planes: jnp.ndarray, solid_ext, t) -> jnp.ndarray:
         iy, ix = lax.axis_index(y_axes), lax.axis_index(x_axis)
@@ -229,7 +249,11 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
                           steps_per_launch=steps_per_launch,
                           block_rows=block_rows,
                           block_words=block_words, solid_ext=solid_ext,
-                          variant=variant)
+                          variant=variant, moments_every=k)
+            if k:
+                out, mom = out
+                return (out[..., d:d + hl, 1:1 + wdl],
+                        lax.psum(mom, psum_axes))
             return out[..., d:d + hl, 1:1 + wdl]
 
         if static_solid:
@@ -254,18 +278,36 @@ def make_sharded_stepper(mesh, *, y_axes: Axes = ("data",),
             return rulespec.step_planes_rule(s, tt, rule, y0=row0,
                                              chi=chi, accel=acc)
 
-        if d == 1:
+        if k:
+            # Moments cadence: Python-unrolled round (depth is small) --
+            # the fallback steps the full extended array, whose owned
+            # region is correct at every step, so recording the owned
+            # slice matches the in-kernel path bit-exactly.
+            moms = []
+            for j in range(d):
+                ext = one(ext, t + j)
+                if (j + 1) % k == 0:
+                    own = ext[..., d:d + hl, 1:1 + wdl]
+                    if static_solid:
+                        own = own[..., :rule.n_planes - 1, :, :]
+                    moms.append(rulespec.compute_moments(own, mspec))
+            mom = lax.psum(jnp.stack(moms, axis=-2), psum_axes)
+        elif d == 1:
             ext = one(ext, t)
         else:
             ext = lax.fori_loop(0, d, lambda j, s: one(s, t + j), ext)
         if static_solid:
             ext = ext[..., :rule.n_planes - 1, :, :]
+        if k:
+            return ext[..., d:d + hl, 1:1 + wdl], mom
         return ext[..., d:d + hl, 1:1 + wdl]
 
+    out_spec = (spec, P()) if k else spec     # psum'd moments: replicated
     if static_solid:
-        return _shard_map(chunk, mesh, (spec, P(y_axes, x_axis), P()), spec)
+        return _shard_map(chunk, mesh, (spec, P(y_axes, x_axis), P()),
+                          out_spec)
     return _shard_map(lambda planes, t: chunk(planes, None, t), mesh,
-                      (spec, P()), spec)
+                      (spec, P()), out_spec)
 
 
 def make_run(mesh, steps: int, **kw):
@@ -277,18 +319,44 @@ def make_run(mesh, steps: int, **kw):
     and the loop advances the 7 dynamic planes against the cached tile;
     the unchanged solid plane is stitched back into the result.  Batched
     stacks share lane 0's geometry (ensemble diversity enters through the
-    initial conditions, not the obstacles)."""
+    initial conditions, not the obstacles).
+
+    With ``moments_every`` = k (must divide ``depth``) the result is
+    ``(planes, moments)``: each round's ``depth // k`` fused records land
+    in a preallocated ``(..., steps // k, n_moments)`` buffer via
+    ``dynamic_update_slice`` inside the round loop."""
     depth = kw.get("depth", 1)
     static_solid = kw.get("static_solid", False)
-    sp = rulespec.get_rule(kw.get("variant", "fhp2")).solid_plane
+    rule = rulespec.get_rule(kw.get("variant", "fhp2"))
+    sp = rule.solid_plane
+    k = int(kw.get("moments_every", 0))
     assert steps % depth == 0, (steps, depth)
     stepper = make_sharded_stepper(mesh, **kw)
+    if k:
+        mspec = rulespec.moment_spec(
+            rule, stack_planes=rule.n_planes - 1 if static_solid else None)
+        r_round = depth // k
+
+    def loop(state, step_round):
+        """fori_loop over rounds; with moments, the carry grows a record
+        buffer each round writes its ``r_round`` rows into."""
+        if not k:
+            return lax.fori_loop(0, steps // depth,
+                                 lambda i, s: step_round(i, s), state)
+        buf = jnp.zeros(state.shape[:-3] + (steps // k, mspec.n_moments),
+                        jnp.int32)
+
+        def body(i, carry):
+            s, b = carry
+            s, m = step_round(i, s)
+            starts = (0,) * (b.ndim - 2) + (i * r_round, 0)
+            return s, lax.dynamic_update_slice(b, m, starts)
+
+        return lax.fori_loop(0, steps // depth, body, (state, buf))
 
     if not static_solid:
         def run(planes, t0):
-            def body(i, s):
-                return stepper(s, t0 + i * depth)
-            return lax.fori_loop(0, steps // depth, body, planes)
+            return loop(planes, lambda i, s: stepper(s, t0 + i * depth))
 
         return run
 
@@ -303,11 +371,10 @@ def make_run(mesh, steps: int, **kw):
             solid = solid[0]          # lanes share the geometry
         solid_ext = cache(solid)      # one exchange per geometry
 
-        def body(i, s):
-            return stepper(s, solid_ext, t0 + i * depth)
-
-        dyn = lax.fori_loop(0, steps // depth, body, dyn)
-        return jnp.concatenate([dyn, planes[..., sp:, :, :]], axis=-3)
+        out = loop(dyn, lambda i, s: stepper(s, solid_ext, t0 + i * depth))
+        dyn, mom = out if k else (out, None)
+        planes = jnp.concatenate([dyn, planes[..., sp:, :, :]], axis=-3)
+        return (planes, mom) if k else planes
 
     return run
 
@@ -318,7 +385,7 @@ def make_ensemble_run(mesh, steps: int, *, variant: str = "fhp2",
                       steps_per_launch: int | None = None,
                       block_rows: int = 0, block_words: int = 0,
                       overlap: bool = False, y_axes: Axes = ("data",),
-                      x_axis: str = "model"):
+                      x_axis: str = "model", moments_every: int = 0):
     """``(run, sharding)`` for a batched ``(B, n_planes, H, Wd)`` ensemble:
     the serve engine's one entry point for advancing a lane group.
 
@@ -333,7 +400,15 @@ def make_ensemble_run(mesh, steps: int, *, variant: str = "fhp2",
     fallback.  With a mesh, the sharded halo-exchange stepper runs with
     the given ``(depth, T, blocks, overlap)`` point and ``sharding`` is
     the batched lattice ``NamedSharding`` to place states with.
+
+    ``moments_every`` = k > 0 makes ``run`` return ``(planes, moments)``
+    with ``moments`` the per-lane ``(B, steps // k, n_moments)`` int32
+    fused ``MomentSpec`` time series -- recorded in-kernel on the Pallas
+    paths, post-step on the jnp fallback, identical layouts
+    (``rulespec.moment_spec(rule)``); on a mesh, k must divide ``depth``.
+    The serve engine reads its per-round audits straight from this.
     """
+    k = int(moments_every)
     if mesh is None:
         rule = rulespec.get_rule(variant)
         if use_pallas:
@@ -344,7 +419,22 @@ def make_ensemble_run(mesh, steps: int, *, variant: str = "fhp2",
                     planes, steps, p_force=p_force, t0=t0,
                     steps_per_launch=steps_per_launch or 1,
                     block_rows=block_rows, block_words=block_words,
-                    variant=variant)
+                    variant=variant, moments_every=k)
+        elif k:
+            mspec = rulespec.moment_spec(rule)
+
+            def run(planes, t0):
+                s = planes
+                moms = []
+                for j in range(int(steps)):
+                    s = rulespec.run_planes_rule(s, 1, rule,
+                                                 p_force=p_force, t0=t0 + j)
+                    if (j + 1) % k == 0:
+                        moms.append(rulespec.compute_moments(s, mspec))
+                mom = (jnp.stack(moms, axis=-2) if moms else
+                       jnp.zeros(planes.shape[:-3] + (0, mspec.n_moments),
+                                 jnp.int32))
+                return s, mom
         else:
             def run(planes, t0):
                 return rulespec.run_planes_rule(planes, steps, rule,
@@ -354,7 +444,7 @@ def make_ensemble_run(mesh, steps: int, *, variant: str = "fhp2",
                    p_force=p_force, depth=depth, use_pallas=use_pallas,
                    batched=True, steps_per_launch=steps_per_launch,
                    block_rows=block_rows, block_words=block_words,
-                   overlap=overlap, variant=variant)
+                   overlap=overlap, variant=variant, moments_every=k)
     sharding = NamedSharding(mesh, lattice_spec(y_axes, x_axis,
                                                 batched=True))
     return run, sharding

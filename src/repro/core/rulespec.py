@@ -411,6 +411,137 @@ def audit(spec: RuleSpec, planes: jnp.ndarray, expected: Dict[str, object],
     return bad
 
 
+# ---------------------------------------------------------------------------
+# Fused in-kernel moments: the static description of what the Pallas
+# kernel accumulates per block while the planes sit in VMEM.
+#
+# Every moment is a linear combination of *term* popcounts, where a term
+# is either one plane (``(p,)``) or the AND of two planes (``(a, b)`` --
+# the structural-exclusivity overlap, expected 0).  The same
+# :class:`MomentSpec` drives three bit-identical computations: the
+# kernel's per-block SWAR accumulation (``kernels/fhp_step/kernel.py``),
+# the post-hoc reference (:func:`compute_moments`, the popcount path the
+# bit-exactness gate compares against), and the serve engine's audits
+# (the moment rows are named to match :func:`invariants` keys, so the
+# fused output replaces the per-cadence invariant re-stream for free).
+# All accumulation is int32 (the kernel's native width);
+# :func:`require_moment_headroom` refuses lattices whose worst-case
+# moment could overflow it.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentSpec:
+    """Static moment layout: ``moments = coeffs @ popcount(terms)``.
+
+    ``names[r]`` labels row ``r`` (``mass``, ``plane{i}``, ``solid``,
+    ``px2``, ``py``, ``excl{a}_{b}``); ``terms[t]`` is ``(p,)`` (plane
+    popcount) or ``(a, b)`` (pairwise-AND popcount); ``coeffs[r][t]``
+    the int weight of term ``t`` in row ``r``.  Hashable (static kernel
+    parameter)."""
+
+    names: Tuple[str, ...]
+    terms: Tuple[Tuple[int, ...], ...]
+    coeffs: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def n_moments(self) -> int:
+        return len(self.names)
+
+    @property
+    def n_terms(self) -> int:
+        return len(self.terms)
+
+    def row(self, name: str) -> int:
+        return self.names.index(name)
+
+
+def moment_spec(spec: RuleSpec,
+                stack_planes: Optional[int] = None) -> MomentSpec:
+    """The :class:`MomentSpec` of ``spec`` on a ``stack_planes``-plane
+    stack (default ``spec.n_planes``; pass ``n_planes - 1`` for the
+    static-solid dynamic stack, which drops the ``solid`` row -- the
+    cached solid plane is constant, so its popcount needs no in-kernel
+    accumulation)."""
+    np_ = spec.n_planes if stack_planes is None else stack_planes
+    terms: List[Tuple[int, ...]] = []
+
+    def term(t: Tuple[int, ...]) -> int:
+        if t not in terms:
+            terms.append(t)
+        return terms.index(t)
+
+    rows: List[Tuple[str, Dict[int, int]]] = []
+    if spec.conserves_mass and spec.mass_planes:
+        rows.append(("mass", {term((p,)): 1 for p in spec.mass_planes}))
+        if spec.per_plane_conserved:
+            for p in spec.mass_planes:
+                rows.append((f"plane{p}", {term((p,)): 1}))
+    if spec.solid_plane is not None and spec.solid_plane < np_:
+        rows.append(("solid", {term((spec.solid_plane,)): 1}))
+    if spec.conserves_momentum:
+        rows.append(("px2", {term((i,)): int(rules.CX2[i])
+                             for i in range(rules.N_DIR)}))
+        rows.append(("py", {term((i,)): int(rules.CY[i])
+                            for i in range(rules.N_DIR)}))
+    exc = spec.exclusive_planes
+    for a in range(len(exc)):
+        for b in range(a + 1, len(exc)):
+            rows.append((f"excl{exc[a]}_{exc[b]}",
+                         {term((exc[a], exc[b])): 1}))
+    for t in terms:
+        assert all(p < np_ for p in t), (t, np_, spec.name)
+    coeffs = tuple(tuple(row.get(ti, 0) for ti in range(len(terms)))
+                   for _, row in rows)
+    return MomentSpec(names=tuple(n for n, _ in rows),
+                      terms=tuple(terms), coeffs=coeffs)
+
+
+def compute_moments(planes: jnp.ndarray, ms: MomentSpec) -> jnp.ndarray:
+    """Post-hoc reference: the moments of packed ``(..., P, H, Wd)``
+    planes as ``(..., n_moments)`` **int32** (leading axes = ensemble
+    lanes).  Bit-identical to the kernel's fused accumulation -- fixed
+    int32 regardless of the x64 flag, matching the kernel's native
+    accumulator width (``require_moment_headroom`` guards overflow)."""
+    import jax
+    vals = []
+    for t in ms.terms:
+        p = planes[..., t[0], :, :]
+        if len(t) == 2:
+            p = p & planes[..., t[1], :, :]
+        vals.append(jax.lax.population_count(p).sum(
+            axis=(-2, -1), dtype=jnp.int32))
+    tv = jnp.stack(vals, axis=-1)                       # (..., n_terms)
+    c = jnp.asarray(ms.coeffs, jnp.int32)               # (rows, terms)
+    return (tv[..., None, :] * c).sum(axis=-1, dtype=jnp.int32)
+
+
+def moments_dict(ms: MomentSpec, values) -> Dict[str, object]:
+    """``{name: values[..., r]}`` view of a moments array/record."""
+    return {name: values[..., r] for r, name in enumerate(ms.names)}
+
+
+def moment_headroom(ms: MomentSpec, n_sites: int) -> int:
+    """Worst-case |moment| on an ``n_sites``-node lattice (every term
+    popcount is at most ``n_sites``)."""
+    return max((sum(abs(c) for c in row) for row in ms.coeffs), default=0) \
+        * n_sites
+
+
+def require_moment_headroom(ms: MomentSpec, n_sites: int) -> None:
+    """Refuse moment accumulation that could overflow int32: the fused
+    path (and :func:`compute_moments`) accumulate in the kernel's native
+    int32, so a lattice whose worst-case moment reaches 2**31 must fall
+    back to the post-hoc int64 ``invariants`` path instead of silently
+    wrapping."""
+    worst = moment_headroom(ms, n_sites)
+    if worst >= 2 ** 31:
+        raise ValueError(
+            f"moment accumulator overflow: worst-case |moment| {worst} "
+            f">= 2**31 on a {n_sites}-site lattice (int32 in-kernel "
+            f"accumulation); use the post-hoc invariants path")
+
+
 def oracle_run(state, steps: int, spec: RuleSpec, t0: int = 0):
     """Advance the byte oracle ``steps`` steps, drawing the *word-RNG*
     chirality stream (expanded to bytes) for rules that need it -- so the

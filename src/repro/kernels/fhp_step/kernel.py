@@ -181,6 +181,46 @@ def _shift_x(p: jnp.ndarray, dx: int) -> jnp.ndarray:
     raise ValueError(dx)
 
 
+def _popcount_u32(v: jnp.ndarray) -> jnp.ndarray:
+    """Per-word popcount via the SWAR reduction (shifts/masks/adds only,
+    so it lowers on every Pallas backend; the final uint32 multiply
+    wraps, which is exactly the horizontal byte-sum folding trick)."""
+    v = v - ((v >> 1) & _U32(0x55555555))
+    v = (v & _U32(0x33333333)) + ((v >> 2) & _U32(0x33333333))
+    v = (v + (v >> 4)) & _U32(0x0F0F0F0F)
+    return (v * _U32(0x01010101)) >> 24
+
+
+def _block_moments(tile: jnp.ndarray, mask_words,
+                   moment_terms, moment_coeffs) -> jnp.ndarray:
+    """This block's moment partials: ``(n_moments,)`` int32.
+
+    ``tile`` is the program's own valid ``(n_planes, bh, bw)`` interior
+    at the recorded step; ``mask_words`` (or None) zeroes words outside
+    the caller's validity bounds (extended mode: pad rows/words and the
+    halo ring).  Each term is one plane's popcount (``(p,)``) or a
+    pairwise-AND popcount (``(a, b)``); moments are their static int
+    linear combinations (``core.rulespec.MomentSpec``) -- the cross-block
+    (and cross-shard) sum epilogue lives in ``ops.py`` / ``distributed``.
+    """
+    sums = []
+    for t in moment_terms:
+        v = tile[t[0]]
+        if len(t) == 2:
+            v = v & tile[t[1]]
+        if mask_words is not None:
+            v = v & mask_words
+        sums.append(jnp.sum(_popcount_u32(v).astype(jnp.int32)))
+    out = []
+    for row in moment_coeffs:
+        acc = jnp.int32(0)
+        for c, s in zip(row, sums):
+            if c:
+                acc = acc + jnp.int32(c) * s
+        out.append(acc)
+    return jnp.stack(out)
+
+
 def _hash_u32(x: jnp.ndarray) -> jnp.ndarray:
     """murmur3 finalizer; bit-identical to ``core.prng.hash_u32``."""
     x = x ^ (x >> 16)
@@ -290,7 +330,9 @@ def _fused_step(cur: jnp.ndarray, rows_abs: jnp.ndarray, cols_abs, t,
 def fhp_kernel(s_ref, *rest,
                h: int, bh: int, wd: int, bw: int, pq: int, steps: int,
                rng_in_kernel: bool, variant: str = "fhp2",
-               extended: bool = False, static_solid: bool = False):
+               extended: bool = False, static_solid: bool = False,
+               record_steps: tuple = (), moment_terms: tuple = (),
+               moment_coeffs: tuple = (), moment_bounds=None):
     """``steps`` fused FHP updates for a ``(bh, bw)`` tile.
 
     Refs (inputs first, output last, per pallas_call convention): the
@@ -317,6 +359,20 @@ def fhp_kernel(s_ref, *rest,
     docstring): the plane refs carry every plane but the rule's solid
     plane; the solid band is assembled from its own views once and
     sliced per unrolled step.
+
+    Fused observables (``record_steps`` non-empty): after unrolled step
+    ``s`` in ``record_steps`` the program popcount-reduces its own
+    ``(bh, bw)`` interior of the working stack -- which is fully valid at
+    every intermediate step, because the apron only shields halo cells --
+    into the static ``MomentSpec`` linear combinations
+    (``moment_terms`` / ``moment_coeffs``), and a second output block
+    ``(len(record_steps), n_moments)`` int32 carries the per-block
+    partials out (the cross-block sum is ``ops.py``'s epilogue; Pallas
+    revisiting semantics make in-kernel cross-block accumulation
+    non-portable).  ``moment_bounds = (r0, r1, c0, c1)`` masks the
+    reduction to array-local rows ``[r0, r1)`` x words ``[c0, c1)`` --
+    extended mode's validity window, which also drops the row/word
+    padding ``ops.run_extended`` appends.
     """
     spec = rulespec.get_rule(variant)
     x_blocked = bw < wd
@@ -325,6 +381,9 @@ def fhp_kernel(s_ref, *rest,
     rest = rest[nv:]
     if static_solid:
         sol_refs, rest = rest[:nv], rest[nv:]
+    if record_steps:
+        mom_ref = rest[-1]
+        rest = rest[:-1]
     extra_refs = rest[:-1]
     out_ref = rest[-1]
     i = pl.program_id(1)
@@ -361,6 +420,19 @@ def fhp_kernel(s_ref, *rest,
             return jnp.concatenate(parts, axis=-2)
 
     cur = assemble(plane_refs, lead=True)
+    if record_steps:
+        # The (bh, bw) interior always covers array rows i*bh + [0, bh)
+        # and words j*bw + [0, bw); the validity mask is therefore one
+        # word mask shared by every recorded step.
+        mask_words = None
+        if moment_bounds is not None:
+            r0, r1, c0, c1 = moment_bounds
+            ri = i * bh + jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 0)
+            ci = j * bw + jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 1)
+            mask_words = jnp.where(
+                (ri >= r0) & (ri < r1) & (ci >= c0) & (ci < c1),
+                _U32(0xFFFFFFFF), _U32(0))
+        records = []
     if static_solid:
         # Solid extent matching cur's initial (bh + 2T, bw + 2*hx) tile;
         # step s works on tile rows [s, n0 - s) and words [s, w0 - s), so
@@ -402,15 +474,25 @@ def fhp_kernel(s_ref, *rest,
                               spec, chi_pre=extra_refs[0][...],
                               acc_pre=extra_refs[-1][...] if pq > 0 else None,
                               solid=sol, shrink_x=x_blocked)
+        if record_steps and s in record_steps:
+            oy = (cur.shape[1] - bh) // 2
+            ox = (cur.shape[2] - bw) // 2
+            tile = cur[:, oy:oy + bh, ox:ox + bw]
+            records.append(_block_moments(tile, mask_words,
+                                          moment_terms, moment_coeffs))
 
     out_ref[0] = cur
+    if record_steps:
+        mom_ref[0, 0, 0] = jnp.stack(records)
 
 
 def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
                   rng_in_kernel: bool, interpret: bool,
                   variant: str = "fhp2", steps: int = 1, batch: int = 1,
                   extended: bool = False, donate: bool = False,
-                  static_solid: bool = False, bw: int = 0):
+                  static_solid: bool = False, bw: int = 0,
+                  record_steps: tuple = (), moment_terms: tuple = (),
+                  moment_coeffs: tuple = (), moment_bounds=None):
     """Build the pallas_call for a (B, 8, h, wd) plane stack -- or, with
     ``static_solid``, a (B, 7, h, wd) dynamic stack plus a read-only
     (h, wd) solid plane operand (module docstring).
@@ -425,6 +507,12 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
     wd``), where every grid step reads its whole lane before writing --
     multi-tile grids would read tile i-1 after step i-1's writeback (see
     module docstring).
+
+    ``record_steps`` (sorted tuple of in-launch step indices) switches on
+    the fused-observables output: the call returns ``(planes, partials)``
+    where ``partials`` is ``(batch, H/bh, Wd/bw, len(record_steps),
+    n_moments)`` int32 per-block moment partials (``fhp_kernel``
+    docstring); callers sum over the block axes.
     """
     spec = rulespec.get_rule(variant)
     bw = bw or wd
@@ -491,17 +579,30 @@ def make_fhp_step(h: int, wd: int, *, bh: int, pq: int,
             in_specs.append(
                 pl.BlockSpec((bh, bw), lambda b, i, j: (i, j)))        # accel
 
+    record_steps = tuple(sorted(record_steps))
+    assert all(0 <= s < steps for s in record_steps), (record_steps, steps)
     kern = functools.partial(fhp_kernel, h=h, bh=bh, wd=wd, bw=bw, pq=pq,
                              steps=steps, rng_in_kernel=rng_in_kernel,
                              variant=variant, extended=extended,
-                             static_solid=static_solid)
+                             static_solid=static_solid,
+                             record_steps=record_steps,
+                             moment_terms=moment_terms,
+                             moment_coeffs=moment_coeffs,
+                             moment_bounds=moment_bounds)
+    out_specs = pl.BlockSpec((1, np_, bh, bw), lambda b, i, j: (b, 0, i, j))
+    out_shape = jax.ShapeDtypeStruct((batch, np_, h, wd), jnp.uint32)
+    if record_steps:
+        nr, nm = len(record_steps), len(moment_coeffs)
+        out_specs = [out_specs, pl.BlockSpec(
+            (1, 1, 1, nr, nm), lambda b, i, j: (b, i, j, 0, 0))]
+        out_shape = [out_shape, jax.ShapeDtypeStruct(
+            (batch, nb, nbx, nr, nm), jnp.int32)]
     return pl.pallas_call(
         kern,
         grid=(batch, nb, nbx),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, np_, bh, bw),
-                               lambda b, i, j: (b, 0, i, j)),
-        out_shape=jax.ShapeDtypeStruct((batch, np_, h, wd), jnp.uint32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         input_output_aliases={1: 0} if donate else {},
         interpret=interpret,
     )

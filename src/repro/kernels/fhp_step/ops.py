@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.core import prng
 from repro.kernels.fhp_step import kernel as _k
 from repro.roofline import analysis as _roofline
+from repro import telemetry
 
 # v5e VMEM is ~128 MiB but a realistic per-kernel working-set budget is far
 # smaller; we keep the resident blocks (3 input bands + 1 output band +
@@ -58,7 +59,8 @@ def _pow2_ge(x: int) -> int:
 
 
 def vmem_bytes(bh: int, wd: int, steps: int = 1, block_words: int = 0,
-               static_solid: bool = False, n_planes: int = 8) -> int:
+               static_solid: bool = False, n_planes: int = 8,
+               moments_words: int = 0) -> int:
     """Estimated VMEM working set of one program instance.
 
     Resident input views + 1 output tile (3 + 1 row bands when x is
@@ -71,7 +73,9 @@ def vmem_bytes(bh: int, wd: int, steps: int = 1, block_words: int = 0,
     overflows the budget on the 7-plane static path.  ``n_planes`` is the
     rule's plane count (``core.rulespec``): fewer planes per node mean a
     proportionally smaller working set, so e.g. 2-plane BML admits far
-    taller bands than 8-plane FHP.
+    taller bands than 8-plane FHP.  ``moments_words`` (= records x
+    n_moments) prices the fused-observables output block plus one
+    popcount temporary per recorded step.
     """
     bw = min(block_words, wd) if block_words else wd
     x_blocked = bw < wd
@@ -85,6 +89,8 @@ def vmem_bytes(bh: int, wd: int, steps: int = 1, block_words: int = 0,
     total = (views + 1) * band + ext + temps
     if static_solid:
         total += views * bh * bw * 4 + (bh + 2 * steps) * ew * 4
+    if moments_words:
+        total += 4 * moments_words + bh * bw * 4  # out block + popcount temp
     return total
 
 
@@ -149,7 +155,7 @@ def pick_tile_extended(wd: int, steps: int = 1,
 
 
 def launch_cost(bh: int, steps: int, block_words: int = 0,
-                width_words: int = 0) -> float:
+                width_words: int = 0, moments_words: int = 0) -> float:
     """Modeled cost per useful site update, in HBM word-cell units.
 
     Per program per launch: a ``(bh + 2*steps) x (bw + 2*hx)`` tile read
@@ -158,13 +164,16 @@ def launch_cost(bh: int, steps: int, block_words: int = 0,
     extents of (cheap, weighted) redundant compute, for ``bh * bw *
     steps`` useful word-updates.  With ``block_words`` unset (or >= the
     width) this reduces exactly to the legacy 1-D row-unit model.
+    ``moments_words`` (records x n_moments) adds the fused-observables
+    partial block each program writes -- tiny next to the plane stack,
+    which is exactly why in-kernel recording beats a post-hoc re-stream.
     """
     bw = (min(block_words, width_words) if block_words and width_words
           else block_words) or width_words or 1
     x_blocked = bool(block_words and width_words and
                      block_words < width_words)
     hx = steps if x_blocked else 0
-    mem = (bh + 2 * steps) * (bw + 2 * hx) + bh * bw
+    mem = (bh + 2 * steps) * (bw + 2 * hx) + bh * bw + moments_words
     comp = sum((bh + 2 * (steps - s - 1))
                * (bw + 2 * (steps - s - 1) if x_blocked else bw)
                for s in range(steps))
@@ -172,15 +181,18 @@ def launch_cost(bh: int, steps: int, block_words: int = 0,
 
 
 def hbm_bytes_per_site(bh: int, steps: int, block_words: int = 0,
-                       width_words: int = 0, n_planes: int = 8) -> float:
+                       width_words: int = 0, n_planes: int = 8,
+                       moments_words: int = 0) -> float:
     """Modeled HBM traffic per site update for the fused T-step kernel.
-    ``n_planes`` scales the per-word byte cost (per-rule plane count)."""
+    ``n_planes`` scales the per-word byte cost (per-rule plane count);
+    ``moments_words`` adds the per-block fused-observables write."""
     bw = (min(block_words, width_words) if block_words and width_words
           else block_words) or width_words or 1
     x_blocked = bool(block_words and width_words and
                      block_words < width_words)
     hx = steps if x_blocked else 0
-    return (n_planes * 4 * ((bh + 2 * steps) * (bw + 2 * hx) + bh * bw)
+    return ((n_planes * 4 * ((bh + 2 * steps) * (bw + 2 * hx) + bh * bw)
+             + 4 * moments_words)
             / (32.0 * bh * bw * steps))
 
 
@@ -245,7 +257,8 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
                     max_depth: int | None = None,
                     static_solid: bool = False,
                     n_planes: int = 8,
-                    exchange_latency_s: float | None = None):
+                    exchange_latency_s: float | None = None,
+                    moments_words: int = 0):
     """Choose the launch configuration minimizing modeled cost under the
     VMEM budget -- the joint 2-D tile search.
 
@@ -280,6 +293,10 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
     ``exchange_latency_s=None`` resolves to the measured ppermute latency
     (constant fallback off-mesh) -- only for the sharded search, whose
     cost model is the only consumer.
+    ``moments_words`` (records x n_moments of the fused-observables
+    output, 0 = off) prices the extra per-block partial write in both
+    the VMEM check and the launch cost, so dense recording can tip the
+    tuner toward a launch schedule with fewer, larger blocks.
     """
     best = None
     best_cost = None
@@ -291,10 +308,12 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
                 if h % bh == 0:
                     t_cap = min(bh, max_steps, bw if x_blocked else bh)
                     for steps in range(1, t_cap + 1):
-                        if vmem_bytes(bh, wd, steps, bw,
-                                      n_planes=n_planes) > vmem_budget:
+                        if vmem_bytes(bh, wd, steps, bw, n_planes=n_planes,
+                                      moments_words=moments_words
+                                      ) > vmem_budget:
                             break
-                        cost = launch_cost(bh, steps, bw, wd)
+                        cost = launch_cost(bh, steps, bw, wd,
+                                           moments_words=moments_words)
                         if best_cost is None or cost < best_cost:
                             best, best_cost = (bh, bw, steps), cost
                 bh //= 2
@@ -317,7 +336,8 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
                             bw if x_blocked else bh)
                 for steps in range(1, t_cap + 1):
                     if vmem_bytes(bh, we, steps, bw, static_solid,
-                                  n_planes) > vmem_budget:
+                                  n_planes, moments_words=moments_words
+                                  ) > vmem_budget:
                         break
                     # The split's boundary launches cap the tile to each
                     # slice's (smaller) footprint, so the serial VMEM
@@ -340,7 +360,8 @@ def autotune_launch(h: int, wd: int, *, max_steps: int = MAX_STEPS_PER_LAUNCH,
 
 @functools.partial(jax.jit, static_argnames=(
     "p_force", "block_rows", "block_words", "rng_in_kernel", "interpret",
-    "variant", "steps_per_launch", "extended", "hg", "wdg", "donate"))
+    "variant", "steps_per_launch", "extended", "hg", "wdg", "donate",
+    "record_steps", "moment_bounds"))
 def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
                     y0=0, xw0=0, block_rows: int = 0, block_words: int = 0,
                     rng_in_kernel: bool = True,
@@ -350,7 +371,9 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
                     extended: bool = False,
                     hg: int | None = None, wdg: int | None = None,
                     donate: bool = False,
-                    solid: jnp.ndarray | None = None) -> jnp.ndarray:
+                    solid: jnp.ndarray | None = None,
+                    record_steps: tuple = (),
+                    moment_bounds: tuple | None = None) -> jnp.ndarray:
     """``steps_per_launch`` fused stream+collide(+force) FHP steps in one
     kernel launch, on ``(8, H, Wd)`` or batched ``(B, 8, H, Wd)`` uint32
     planes (ensemble lanes; all lanes share the RNG stream).
@@ -376,7 +399,17 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
     ``block_words`` (0 = full width) selects the 2-D (x x y) blocked grid:
     each program owns a ``(block_rows, block_words)`` tile with a
     ``steps_per_launch``-word x apron; ``block_words`` must divide ``Wd``
-    (``run_extended`` word-pads before calling)."""
+    (``run_extended`` word-pads before calling).
+
+    ``record_steps`` (tuple of in-launch step indices) turns on fused
+    observables: the rule's ``MomentSpec`` popcount reductions are
+    accumulated in-kernel while the planes sit in VMEM and the call
+    returns ``(planes, moments)`` with ``moments`` a ``(B?,
+    len(record_steps), n_moments)`` int32 time series (cross-block sum
+    applied here -- the kernel writes per-block partials).
+    ``moment_bounds = (r0, r1, c0, c1)`` restricts the reduction to
+    array rows ``[r0, r1)`` x words ``[c0, c1)`` (the extended-shard
+    validity window); ``None`` reduces the whole (periodic) lattice."""
     from repro.core import rulespec
     spec = rulespec.get_rule(variant)
     squeeze = planes.ndim == 3
@@ -427,11 +460,19 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
         interpret = jax.default_backend() != "tpu"
     pq = prng.quantize_p(p_force)
 
+    moment_kw = {}
+    if record_steps:
+        ms = rulespec.moment_spec(spec, stack_planes=np_)
+        n_sites = (hg * wdg if extended else h * wd) * 32
+        rulespec.require_moment_headroom(ms, n_sites)
+        moment_kw = dict(record_steps=tuple(record_steps),
+                         moment_terms=ms.terms, moment_coeffs=ms.coeffs,
+                         moment_bounds=moment_bounds)
     step = _k.make_fhp_step(h, wd, bh=bh, bw=bw, pq=pq,
                             rng_in_kernel=rng_in_kernel, interpret=interpret,
                             variant=variant, steps=T, batch=b,
                             extended=extended, donate=donate,
-                            static_solid=static_solid)
+                            static_solid=static_solid, **moment_kw)
     scalars = jnp.stack([jnp.asarray(t, jnp.int32),
                          jnp.asarray(y0, jnp.int32),
                          jnp.asarray(xw0, jnp.int32),
@@ -450,19 +491,70 @@ def fhp_step_pallas(planes: jnp.ndarray, t, *, p_force: float = 0.0,
             args.append(prng.bernoulli_words((h, wd), t, p_force,
                                              y0=y0, xw0=xw0))
     out = step(*args)
+    if record_steps:
+        planes_out, mom_part = out
+        mom = mom_part.sum(axis=(1, 2))        # cross-block epilogue
+        if squeeze:
+            return planes_out[0], mom[0]
+        return planes_out, mom
     return out[0] if squeeze else out
 
 
+def _launch_schedule(sizes, offset: int, k: int):
+    """Per-launch ``record_steps`` for a record-every-``k`` cadence:
+    launch ``j`` of length ``L`` records at in-launch step ``s`` exactly
+    when the absolute step count ``offset + done + s + 1`` is a multiple
+    of ``k`` (``offset`` carries the cadence phase across calls)."""
+    done = 0
+    out = []
+    for L in sizes:
+        out.append(tuple(s for s in range(L)
+                         if (offset + done + s + 1) % k == 0))
+        done += L
+    return out
+
+
 def run_pallas(planes: jnp.ndarray, steps: int, *, p_force: float = 0.0,
-               t0=0, steps_per_launch: int = 1, **kw) -> jnp.ndarray:
+               t0=0, steps_per_launch: int = 1,
+               moments_every: int = 0, **kw) -> jnp.ndarray:
     """Advance ``steps`` fused steps (fori_loop carry, donable).
 
     With ``steps_per_launch`` = T > 1 the plane stack crosses HBM once per
     T steps; the ``steps % T`` trailing steps run as **one** launch with
     ``steps_per_launch = rem`` (one more HBM round trip, not rem of them).
-    Bit-identical to the T=1 path for any T (equivalence-tested)."""
+    Bit-identical to the T=1 path for any T (equivalence-tested).
+
+    ``moments_every`` = k > 0 switches on fused observables and returns
+    ``(planes, moments)``: the rule's ``MomentSpec`` reductions after
+    every k-th step -- ``moments[..., r, :]`` is the state after step
+    ``(r + 1) * k`` -- recorded in-kernel at dense cadences (k < T costs
+    no extra HBM round trip; the whole point).  The launch loop then
+    unrolls in Python (record schedules are per-launch statics), so keep
+    ``steps`` modest on the moments path."""
     T = int(steps_per_launch)
     full, rem = divmod(int(steps), T)
+    k = int(moments_every)
+    if k:
+        from repro.core import rulespec
+        spec = rulespec.get_rule(kw.get("variant", "fhp2"))
+        ms = rulespec.moment_spec(spec, stack_planes=planes.shape[-3])
+        sizes = [T] * full + ([rem] if rem else [])
+        moms = []
+        out = planes
+        done = 0
+        for L, rs in zip(sizes, _launch_schedule(sizes, 0, k)):
+            if rs:
+                out, m = fhp_step_pallas(out, t0 + done, p_force=p_force,
+                                         steps_per_launch=L,
+                                         record_steps=rs, **kw)
+                moms.append(m)
+            else:
+                out = fhp_step_pallas(out, t0 + done, p_force=p_force,
+                                      steps_per_launch=L, **kw)
+            done += L
+        mom = (jnp.concatenate(moms, axis=-2) if moms else
+               jnp.zeros(planes.shape[:-3] + (0, ms.n_moments), jnp.int32))
+        return out, mom
 
     def body(i, s):
         return fhp_step_pallas(s, t0 + i * T, p_force=p_force,
@@ -479,7 +571,9 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
                  y0=0, xw0=0, hg: int, wdg: int,
                  steps_per_launch: int | None = None,
                  block_rows: int = 0, block_words: int = 0,
-                 solid_ext: jnp.ndarray | None = None, **kw) -> jnp.ndarray:
+                 solid_ext: jnp.ndarray | None = None,
+                 moments_every: int = 0,
+                 moments_offset: int = 0, **kw) -> jnp.ndarray:
     """Advance a halo-extended shard array ``steps`` steps in
     ceil(steps / T) extended-mode launches (carry aliased in place when
     the launch is single-band; see ``kernel.make_fhp_step``).
@@ -506,7 +600,17 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
     deterministic-garbage RNG that contaminates at most one bit per step
     leftward -- it never crosses the outer halo word the validity
     contract already drops).  Auto keeps the legacy full-width 1-D band
-    when it fits VMEM and splits x otherwise (``pick_tile_extended``)."""
+    when it fits VMEM and splits x otherwise (``pick_tile_extended``).
+
+    ``moments_every`` = k > 0 returns ``(ext, moments)`` with in-kernel
+    ``MomentSpec`` reductions over the final validity window -- rows
+    ``[steps, He - steps)`` x words ``[1, Wde - 1)``, i.e. exactly the
+    owned shard on the usual ``He = hl + 2*steps`` call -- after every
+    step where ``(moments_offset + step + 1) % k == 0``
+    (``moments_offset`` carries the cadence phase across exchange
+    rounds).  The window is a subset of the valid region at *every*
+    intermediate step (validity shrinks monotonically toward it), so
+    dense recording inside one exchange round is still bit-exact."""
     from repro.core import rulespec
     n_planes = rulespec.get_rule(kw.get("variant", "fhp2")).n_planes
     steps = int(steps)
@@ -551,16 +655,41 @@ def run_extended(ext: jnp.ndarray, steps: int, *, t0=0, p_force: float = 0.0,
     # remainder -- so a trailing short launch aliases its carry too.
     donate = bh == ext.shape[-2] and bw == ext.shape[-1]
     full, rem = divmod(steps, T)
-    for j in range(full):
-        ext = fhp_step_pallas(ext, t0 + j * T, p_force=p_force, y0=y0,
-                              xw0=xw0, steps_per_launch=T, block_rows=bh,
-                              block_words=bw, extended=True, hg=hg, wdg=wdg,
-                              donate=donate, solid=solid_ext, **kw)
-    if rem:
-        ext = fhp_step_pallas(ext, t0 + full * T, p_force=p_force, y0=y0,
-                              xw0=xw0, steps_per_launch=rem, block_rows=bh,
-                              block_words=bw, extended=True, hg=hg, wdg=wdg,
-                              donate=donate, solid=solid_ext, **kw)
+    k = int(moments_every)
+    sizes = [T] * full + ([rem] if rem else [])
+    schedules = (_launch_schedule(sizes, int(moments_offset), k) if k
+                 else [()] * len(sizes))
+    # Validity window from the *pre-pad* extents: pad rows/words (indices
+    # >= he / wde) fall outside [steps, he-steps) x [1, wde-1) for free.
+    bounds = (steps, he - steps, 1, wde - 1)
+    moms = []
+    done = 0
+    with telemetry.span("kernel.extended", steps=steps, launches=len(sizes)):
+        for L, rs in zip(sizes, schedules):
+            if rs:
+                ext, m = fhp_step_pallas(
+                    ext, t0 + done, p_force=p_force, y0=y0, xw0=xw0,
+                    steps_per_launch=L, block_rows=bh, block_words=bw,
+                    extended=True, hg=hg, wdg=wdg, donate=donate,
+                    solid=solid_ext, record_steps=rs, moment_bounds=bounds,
+                    **kw)
+                moms.append(m)
+            else:
+                ext = fhp_step_pallas(
+                    ext, t0 + done, p_force=p_force, y0=y0, xw0=xw0,
+                    steps_per_launch=L, block_rows=bh, block_words=bw,
+                    extended=True, hg=hg, wdg=wdg, donate=donate,
+                    solid=solid_ext, **kw)
+            done += L
+    if k:
+        if moms:
+            mom = jnp.concatenate(moms, axis=-2)
+        else:
+            from repro.core import rulespec
+            spec = rulespec.get_rule(kw.get("variant", "fhp2"))
+            ms = rulespec.moment_spec(spec, stack_planes=ext.shape[-3])
+            mom = jnp.zeros(ext.shape[:-3] + (0, ms.n_moments), jnp.int32)
+        return ext[..., :he, :wde], mom
     return ext[..., :he, :wde]
 
 
@@ -569,6 +698,7 @@ def run_extended_split(ext: jnp.ndarray, steps: int, *, t0=0,
                        steps_per_launch: int | None = None,
                        block_rows: int = 0, block_words: int = 0,
                        solid_ext: jnp.ndarray | None = None,
+                       moments_every: int = 0, moments_offset: int = 0,
                        **kw) -> jnp.ndarray:
     """``run_extended`` split into an interior launch plus four thin
     boundary launches, for compute/communication overlap in the sharded
@@ -611,27 +741,44 @@ def run_extended_split(ext: jnp.ndarray, steps: int, *, t0=0,
     ``solid_ext`` slices exactly: the static-geometry cache holds the
     *true* global solid over the whole extended tile, so each sub-slice
     of it is that sub-lattice's correct pre-extended solid operand.
+
+    ``moments_every`` composes exactly: each sub-launch's validity
+    window (``run_extended``'s default bounds on its slice) is one of
+    five disjoint, exhaustive pieces of the owned shard -- top/bottom
+    row bands, left/right edge words, interior -- so the five per-step
+    partial moments *sum* to the serial path's shard moments, bit-exact
+    (integer adds of disjoint popcounts).  Returns ``(ext, moments)``.
     """
     d = int(steps)
     he, wde = ext.shape[-2], ext.shape[-1]
     hl, wdl = he - 2 * d, wde - 2
+    k = int(moments_every)
+    mom_kw = dict(moments_every=k, moments_offset=moments_offset) if k else {}
     run = functools.partial(
         run_extended, t0=t0, p_force=p_force, hg=hg, wdg=wdg,
         steps_per_launch=steps_per_launch, block_rows=block_rows,
-        block_words=block_words, **kw)
+        block_words=block_words, **mom_kw, **kw)
     if hl <= 2 * d or wdl <= 2:
         return run(ext, d, y0=y0, xw0=xw0, solid_ext=solid_ext)
+
+    moms = []
 
     def sub(rows, words, y_off, xw_off):
         sl = ext[..., rows, words]
         se = None if solid_ext is None else solid_ext[rows, words]
-        return run(sl, d, y0=y0 + y_off, xw0=xw0 + xw_off, solid_ext=se)
+        out = run(sl, d, y0=y0 + y_off, xw0=xw0 + xw_off, solid_ext=se)
+        if k:
+            out, m = out
+            moms.append(m)
+        return out
 
-    interior = sub(slice(d, he - d), slice(1, wde - 1), d, 1)
-    top = sub(slice(0, 3 * d), slice(None), 0, 0)
-    bot = sub(slice(he - 3 * d, he), slice(None), he - 3 * d, 0)
-    left = sub(slice(d, he - d), slice(0, 3), d, 0)
-    right = sub(slice(d, he - d), slice(wde - 3, wde), d, wde - 3)
+    with telemetry.span("kernel.interior", steps=d):
+        interior = sub(slice(d, he - d), slice(1, wde - 1), d, 1)
+    with telemetry.span("kernel.boundary", steps=d):
+        top = sub(slice(0, 3 * d), slice(None), 0, 0)
+        bot = sub(slice(he - 3 * d, he), slice(None), he - 3 * d, 0)
+        left = sub(slice(d, he - d), slice(0, 3), d, 0)
+        right = sub(slice(d, he - d), slice(wde - 3, wde), d, wde - 3)
 
     mid = jnp.concatenate([left[..., d:hl - d, 1:2],
                            interior[..., d:hl - d, 1:wdl - 1],
@@ -640,4 +787,7 @@ def run_extended_split(ext: jnp.ndarray, steps: int, *, t0=0,
                              mid,
                              bot[..., d:2 * d, 1:wde - 1]], axis=-2)
     widths = [(0, 0)] * (shard.ndim - 2) + [(d, d), (1, 1)]
-    return jnp.pad(shard, widths)
+    out = jnp.pad(shard, widths)
+    if k:
+        return out, functools.reduce(jnp.add, moms)
+    return out

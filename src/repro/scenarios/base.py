@@ -53,6 +53,21 @@ class Scenario:
         """Global packed (H, W//32) uint32 solid plane."""
         return raster.pack_mask(self.solid_mask())
 
+    def obstacle_words(self) -> Tuple[Tuple[str, np.ndarray], ...]:
+        """``((name, packed (H, W//32) uint32 words), ...)`` for the
+        named obstacles, rasterized once per scenario and cached -- the
+        geometry is immutable, so per-frame consumers (drag time series,
+        ``observables.obstacle_report``) must not re-run the scanline
+        rasterizer every call."""
+        cached = getattr(self, "_obstacle_words", None)
+        if cached is None:
+            shape = (self.height, self.width // 32)
+            cached = tuple((name, raster.solid_words(geom, shape))
+                           for name, geom in self.obstacles)
+            # frozen dataclass: memoize via object.__setattr__
+            object.__setattr__(self, "_obstacle_words", cached)
+        return cached
+
     def rule(self):
         """The registered :class:`repro.core.rulespec.RuleSpec` of
         ``variant``."""

@@ -111,7 +111,7 @@ def jam_fraction(planes: jnp.ndarray, t) -> jnp.ndarray:
     return blocked / jnp.maximum(total, 1.0)
 
 
-def frame_summary(planes: jnp.ndarray, spec, t) -> dict:
+def frame_summary(planes: jnp.ndarray, spec, t, inv=None) -> dict:
     """One streamed observable frame for a single-lane packed state of
     rule ``spec`` (a :class:`repro.core.rulespec.RuleSpec`): plain
     Python numbers, JSON-ready -- what the serve engine sends back to a
@@ -120,10 +120,18 @@ def frame_summary(planes: jnp.ndarray, spec, t) -> dict:
     Always carries ``mass``; FHP-family rules add the global momentum
     moments (``px2``/``py``); BML-style exclusive-species rules add
     per-species ``car_counts`` and the ``jam_fraction`` order
-    parameter."""
+    parameter.
+
+    ``inv`` optionally supplies the invariant values (``mass``,
+    ``plane{i}``, ``px2``/``py``, ...) already in hand -- e.g. the serve
+    engine's in-kernel fused moments, bit-identical to what this
+    function would recompute -- so streaming a frame costs no extra
+    popcount pass.  Order parameters that are not conserved quantities
+    (``jam_fraction``) always come from ``planes``."""
     from repro.core import rulespec
-    inv = rulespec.invariants(spec, planes,
-                              with_momentum=spec.conserves_momentum)
+    if inv is None:
+        inv = rulespec.invariants(spec, planes,
+                                  with_momentum=spec.conserves_momentum)
     out = {"t": int(t), "mass": int(inv["mass"])}
     if "px2" in inv:
         out["px2"], out["py"] = int(inv["px2"]), int(inv["py"])
@@ -137,12 +145,14 @@ def frame_summary(planes: jnp.ndarray, spec, t) -> dict:
 
 def obstacle_report(planes: jnp.ndarray, scenario) -> dict:
     """Per-obstacle momentum transfer for a Scenario's named obstacles:
-    {name: (px2, py)} as plain ints (single-lane states)."""
-    from repro.geometry import raster
+    {name: (px2, py)} as plain ints (single-lane states).
+
+    Obstacle rasterizations come from the scenario's per-geometry cache
+    (:meth:`repro.scenarios.base.Scenario.obstacle_words`) -- the
+    geometry is static, so a drag time series over many frames pays the
+    scanline rasterizer once, not once per frame."""
     out = {}
-    for name, geom in scenario.obstacles:
-        words = raster.solid_words(
-            geom, (scenario.height, scenario.width // WORD))
-        px2, py = solid_momentum(planes, jnp.asarray(words))
+    for name, words in scenario.obstacle_words():
+        px2, py = solid_momentum(planes, words)
         out[name] = (int(px2), int(py))
     return out

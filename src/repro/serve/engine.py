@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as _telemetry
 from repro.checkpoint import store
 from repro.core import distributed, rulespec
 
@@ -114,8 +115,15 @@ class _LaneGroup:
             p_force=p_force, depth=engine.depth,
             use_pallas=engine.use_pallas,
             steps_per_launch=engine.steps_per_launch,
-            y_axes=engine.y_axes, x_axis=engine.x_axis)
+            y_axes=engine.y_axes, x_axis=engine.x_axis,
+            moments_every=engine.round_steps)
         self.run = jax.jit(run)
+        self.mspec = rulespec.moment_spec(self.spec)
+        # End-of-round fused moments, (slots, n_moments) int32 on host.
+        # ``moments_dirty`` flags moments that predate an injected state
+        # corruption -- the audit must recompute from the state then.
+        self.last_moments: Optional[np.ndarray] = None
+        self.moments_dirty = False
         shape = (engine.slots, self.spec.n_planes, engine.height,
                  engine.width // 32)
         self.state = self._place(jnp.zeros(shape, jnp.uint32))
@@ -145,7 +153,8 @@ class CAServeEngine:
                  depth: int = 2, steps_per_launch: Optional[int] = None,
                  use_pallas: bool = False, audit_every: int = 1,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
-                 keep: int = 4, max_retries: int = 2, injector=None):
+                 keep: int = 4, max_retries: int = 2, injector=None,
+                 telemetry=None):
         assert height % 2 == 0 and width % 32 == 0, (height, width)
         assert audit_every >= 1
         assert ckpt_every % audit_every == 0, \
@@ -160,15 +169,19 @@ class CAServeEngine:
         self.ckpt_dir, self.keep = ckpt_dir, keep
         self.max_retries = max_retries
         self.injector = injector
+        self.tel = telemetry if telemetry is not None \
+            else _telemetry.default()
         self.round = 0                  # completed rounds
         self.queue: deque = deque()
         self.jobs: Dict[int, SimJob] = {}
         self.groups: Dict[str, _LaneGroup] = {}
         self._retries: Dict[int, int] = {}   # survives rollback on purpose
+        self._round_inv: Dict[str, tuple] = {}   # per-round audit cache
         self.detections: List[dict] = []
         self.frame_log: List[dict] = []
-        self.stats = {"rounds": 0, "rollbacks": 0, "quarantined": 0,
-                      "jobs_done": 0, "steps_replayed": 0, "recovery": []}
+        self.stats = {"rounds": 0, "audits": 0, "audit_failures": 0,
+                      "rollbacks": 0, "quarantined": 0, "jobs_done": 0,
+                      "steps_replayed": 0, "recovery": []}
 
     # ------------------------------------------------------------------
     # Submission / admission
@@ -230,38 +243,60 @@ class CAServeEngine:
 
     def tick(self):
         """One engine round: (maybe) crash/straggle, admit, advance every
-        live group ``depth`` steps, inject state faults, audit, recover or
+        live group ``depth`` steps (collecting the end-of-round fused
+        moments), inject state faults, audit, recover or
         stream/retire/checkpoint."""
         rnd = self.round
-        if self.injector is not None:
-            self.injector.before_round(rnd)     # may raise SimulatedCrash
-        self._admit()
-        t = rnd * self.round_steps
-        for g in self.groups.values():
-            if not g.live_jobs():
-                continue
-            g.state = g.run(g.state, t)
+        tel = self.tel
+        with tel.span("serve.round", round=rnd):
             if self.injector is not None:
-                host = np.asarray(g.state)
-                bad = self.injector.corrupt(host, g.variant, rnd)
-                if bad is not host:
-                    g.state = g._place(jnp.asarray(bad))
-        self.round = rnd + 1
-        self.stats["rounds"] += 1
-        for g in self.groups.values():
-            for job in g.live_jobs():
-                job.steps_done += self.round_steps
+                self.injector.before_round(rnd)  # may raise SimulatedCrash
+            with tel.span("serve.admit"):
+                self._admit()
+            t = rnd * self.round_steps
+            for g in self.groups.values():
+                if not g.live_jobs():
+                    continue
+                with tel.span("serve.kernel", group=g.key(),
+                              steps=self.round_steps):
+                    state, mom = g.run(g.state, t)
+                    if tel.enabled:
+                        jax.block_until_ready(state)
+                g.state = state
+                g.last_moments = np.asarray(mom[..., -1, :])
+                g.moments_dirty = False
+                if self.injector is not None:
+                    host = np.asarray(g.state)
+                    bad = self.injector.corrupt(host, g.variant, rnd)
+                    if bad is not host:
+                        g.state = g._place(jnp.asarray(bad))
+                        # The fused moments predate this corruption: the
+                        # audit must recompute from the state this round.
+                        g.moments_dirty = True
+            self.round = rnd + 1
+            self.stats["rounds"] += 1
+            for g in self.groups.values():
+                for job in g.live_jobs():
+                    job.steps_done += self.round_steps
 
-        if self.round % self.audit_every == 0:
-            violations = self._audit()
-            if violations:
-                self._recover(violations)
-                return
-        self._stream_frames()
-        self._retire()
-        if (self.ckpt_dir and self.ckpt_every
-                and self.round % self.ckpt_every == 0):
-            self._checkpoint()
+            self._round_inv = {}
+            if self.round % self.audit_every == 0:
+                with tel.span("serve.audit"):
+                    violations = self._audit()
+                self.stats["audits"] += 1
+                if violations:
+                    self.stats["audit_failures"] += 1
+                    with tel.span("serve.rollback"):
+                        self._recover(violations)
+                    return
+            with tel.span("serve.frames"):
+                self._stream_frames()
+            with tel.span("serve.retire"):
+                self._retire()
+            if (self.ckpt_dir and self.ckpt_every
+                    and self.round % self.ckpt_every == 0):
+                with tel.span("serve.checkpoint", round=self.round):
+                    self._checkpoint()
 
     def drain(self, max_rounds: int = 10_000) -> List[SimJob]:
         """Run rounds until every submitted job is done or quarantined."""
@@ -273,9 +308,52 @@ class CAServeEngine:
             rounds += 1
         return [j for j in self.jobs.values() if j.status == DONE]
 
+    def metrics(self) -> dict:
+        """Operational counters plus the telemetry span rollup -- the
+        ``metrics`` block the serve benchmarks record and a scrape
+        endpoint would export."""
+        out = {k: v for k, v in self.stats.items() if k != "recovery"}
+        out["round"] = self.round
+        out["detections"] = len(self.detections)
+        out["frames"] = len(self.frame_log)
+        if self.tel.enabled:
+            out["telemetry"] = self.tel.summary()
+        return out
+
     # ------------------------------------------------------------------
     # Audits and recovery
     # ------------------------------------------------------------------
+
+    def _group_inv(self, g: _LaneGroup):
+        """``(invariants dict of per-lane np arrays, structural-ok bool
+        array)`` for one group, cached per round so the audit and the
+        frame stream share a single computation.
+
+        When the end-of-round fused moments are current, they *are* the
+        invariants (mass / per-plane / solid / momentum rows) and the
+        exclusivity rows double as the structural integrity check -- no
+        state is touched.  When injected corruption postdates them (or
+        no round has advanced this group yet), fall back to the post-hoc
+        popcount path on the live state."""
+        key = g.key()
+        cached = self._round_inv.get(key)
+        if cached is not None:
+            return cached
+        if g.last_moments is not None and not g.moments_dirty:
+            mom = g.last_moments
+            inv = {n: mom[..., r] for r, n in enumerate(g.mspec.names)}
+            ok_struct = np.ones(mom.shape[:-1], bool)
+            for name in [n for n in inv if n.startswith("excl")]:
+                ok_struct = ok_struct & (inv.pop(name) == 0)
+            self.tel.count("serve.audit.fused")
+        else:
+            inv = rulespec.invariants(
+                g.spec, g.state, with_momentum=g.spec.conserves_momentum)
+            inv = {k: np.asarray(v) for k, v in inv.items()}
+            ok_struct = np.asarray(rulespec.integrity_ok(g.spec, g.state))
+            self.tel.count("serve.audit.recomputed")
+        self._round_inv[key] = (inv, ok_struct)
+        return inv, ok_struct
 
     def _audit(self) -> List[dict]:
         """Per-lane invariant audit of every live job; returns the
@@ -285,11 +363,7 @@ class CAServeEngine:
             jobs = g.live_jobs()
             if not jobs:
                 continue
-            momentum = any(j.with_momentum for j in jobs)
-            inv = rulespec.invariants(g.spec, g.state,
-                                      with_momentum=momentum)
-            inv = {k: np.asarray(v) for k, v in inv.items()}
-            ok_struct = np.asarray(rulespec.integrity_ok(g.spec, g.state))
+            inv, ok_struct = self._group_inv(g)
             for job in jobs:
                 bad = {}
                 for name, want in job.expected.items():
@@ -311,6 +385,8 @@ class CAServeEngine:
         t0 = time.perf_counter()
         self.detections.extend(violations)
         flagged = {v["rid"] for v in violations}
+        self.tel.event("serve.detection", critical=True,
+                       round=self.round, rids=sorted(flagged))
         quarantine = set()
         for rid in flagged:
             self._retries[rid] = self._retries.get(rid, 0) + 1
@@ -336,6 +412,9 @@ class CAServeEngine:
                     {"detected_round": detected_at,
                      "restored_round": self.round, "steps_lost": lost,
                      "restore_s": time.perf_counter() - t0})
+                self.tel.event("serve.rollback", critical=True,
+                               detected_round=detected_at,
+                               restored_round=self.round, steps_lost=lost)
         # Quarantine *after* any rollback, so the restored bookkeeping
         # cannot resurrect a job retired for repeated faults.
         for rid in quarantine:
@@ -347,19 +426,27 @@ class CAServeEngine:
                     self.queue.remove(rid)
                 job.status = QUARANTINED
                 self.stats["quarantined"] += 1
+                self.tel.event("serve.quarantine", critical=True, rid=rid,
+                               round=self.round)
 
     def _quarantine(self, job: SimJob):
         g = self._group_for(self._scenario(job))
         g.state = g._place(g.state.at[job.lane].set(jnp.uint32(0)))
         g.slots[job.lane] = None
+        g.last_moments = None
+        self._round_inv.pop(g.key(), None)
         job.status, job.lane = QUARANTINED, -1
         self.stats["quarantined"] += 1
+        self.tel.event("serve.quarantine", critical=True, rid=job.rid,
+                       round=self.round)
 
     def _restart_job(self, job: SimJob):
         sc = self._scenario(job)
         g = self._group_for(sc)
         planes = sc.initial_planes()
         g.state = g._place(g.state.at[job.lane].set(planes))
+        g.last_moments = None
+        self._round_inv.pop(g.key(), None)
         job.admitted_t = self.round * self.round_steps
         job.steps_done = 0
         job.frames.clear()
@@ -372,18 +459,27 @@ class CAServeEngine:
         from repro.scenarios import observables
         t = self.round * self.round_steps
         for g in self.groups.values():
-            for job in g.live_jobs():
-                if not job.frame_every:
-                    continue
-                if job.steps_done % job.frame_every:
-                    continue
+            due = [j for j in g.live_jobs() if j.frame_every
+                   and not j.steps_done % j.frame_every]
+            if not due:
+                continue
+            # The fused end-of-round moments (shared with the audit via
+            # the per-round cache) replace the per-frame invariants
+            # recomputation the engine used to do here.
+            inv, _ = self._group_inv(g)
+            for job in due:
+                lane_inv = {k: v[job.lane] for k, v in inv.items()}
                 frame = observables.frame_summary(g.state[job.lane],
-                                                  g.spec, t)
+                                                  g.spec, t, inv=lane_inv)
                 frame["step"] = job.steps_done
                 job.frames[job.steps_done] = frame
-                self.frame_log.append({"rid": job.rid, "round": self.round,
-                                       "wall": time.perf_counter(),
-                                       "frame": frame})
+                self.tel.count("serve.frames")
+                self.frame_log.append(
+                    {"rid": job.rid, "round": self.round,
+                     "wall": time.perf_counter(), "frame": frame,
+                     "metrics": {"rollbacks": self.stats["rollbacks"],
+                                 "quarantined": self.stats["quarantined"],
+                                 "audits": self.stats["audits"]}})
 
     def _retire(self):
         for g in self.groups.values():
@@ -441,6 +537,8 @@ class CAServeEngine:
         for k, g in self.groups.items():
             g.state = restored["groups"][k]
             g.slots = [None] * self.slots
+            g.last_moments = None
+        self._round_inv = {}
         self.round = meta["round"]
         by_rid = {m["rid"]: m for m in meta["jobs"]}
         self.queue.clear()

@@ -1,0 +1,12 @@
+"""Telemetry layer: spans, counters, gauges; JSONL sink + summary rollup.
+
+See :mod:`repro.telemetry.core`.  Library code instruments against the
+module-level default instance (``telemetry.span("exchange")``), which is
+disabled -- a true no-op -- until ``telemetry.configure(...)`` turns it
+on (the serve engine and ``benchmarks/run.py --profile`` both do).
+"""
+from repro.telemetry.core import (Telemetry, configure, count, default,
+                                  event, gauge, span, summary)
+
+__all__ = ["Telemetry", "configure", "count", "default", "event", "gauge",
+           "span", "summary"]

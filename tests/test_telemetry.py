@@ -1,0 +1,153 @@
+"""Telemetry layer: span nesting, rollups, the JSONL sink schema, the
+disabled-path no-op contract, traced-span behavior under jit, and the
+crash-safe fault trace through the serve engine.
+
+The crash-safety test rides the fault-injection harness: a seeded
+bitflip drives the engine through detection -> rollback, and the
+telemetry JSONL on disk must already contain the critical events
+*without any flush/close from this side* -- the engine fsyncs them at
+emission, so the trace survives the process death that
+``CAServeEngine.resume`` recovers from.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import telemetry
+from repro.telemetry.core import _NULL, Telemetry
+
+
+def test_span_nesting_and_summary():
+    tel = Telemetry(enabled=True)
+    with tel.span("outer", depth=2):
+        with tel.span("inner"):
+            pass
+        with tel.span("inner"):
+            pass
+    s = tel.summary()
+    assert s["spans"]["outer"]["count"] == 1
+    assert s["spans"]["inner"]["count"] == 2
+    for col in ("total_s", "p50_s", "p99_s", "max_s"):
+        assert s["spans"]["inner"][col] >= 0.0
+    tel.count("hits", 3)
+    tel.count("hits")
+    tel.gauge("depth", 7)
+    s = tel.summary()
+    assert s["counters"]["hits"] == 4
+    assert s["gauges"]["depth"] == 7
+
+
+def test_jsonl_sink_schema(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tel = Telemetry(enabled=True, jsonl_path=path)
+    with tel.span("outer"):
+        with tel.span("inner", k=1):
+            pass
+    tel.count("c")
+    tel.gauge("g", 2.5)
+    tel.event("e", critical=True, round=3)
+    tel.close()
+    recs = [json.loads(l) for l in open(path)]
+    by_kind = {}
+    for r in recs:
+        by_kind.setdefault(r["kind"], []).append(r)
+        assert "name" in r and "wall" in r
+    assert {r["name"] for r in by_kind["span"]} == {"outer", "inner"}
+    inner = next(r for r in by_kind["span"] if r["name"] == "inner")
+    assert inner["parent"] == "outer" and inner["attrs"] == {"k": 1}
+    assert inner["traced"] is False and inner["dur_s"] >= 0.0
+    assert by_kind["counter"][0]["n"] == 1
+    assert by_kind["gauge"][0]["value"] == 2.5
+    assert by_kind["event"][0]["critical"] is True
+    assert by_kind["event"][0]["attrs"] == {"round": 3}
+
+
+def test_disabled_is_true_noop(tmp_path):
+    """Disabled telemetry: the span is one shared null object, and no
+    state (registry or sink) is touched."""
+    path = str(tmp_path / "t.jsonl")
+    tel = Telemetry(enabled=False, jsonl_path=path)
+    s1 = tel.span("a", attr=1)
+    s2 = tel.span("b")
+    assert s1 is s2 is _NULL
+    with s1:
+        pass
+    tel.count("c")
+    tel.gauge("g", 1)
+    tel.event("e", critical=True)
+    summ = tel.summary()
+    assert summ["spans"] == {} and summ["counters"] == {}
+    assert summ["events"] == 0
+    tel.close()
+    assert open(path).read() == ""
+
+
+def test_traced_span_under_jit():
+    """A span opened while jax traces wraps the body in a named scope
+    and records with ``traced: true`` (trace-time duration, not step
+    time); the jitted function computes identically."""
+    tel = Telemetry(enabled=True)
+
+    @jax.jit
+    def f(x):
+        with tel.span("traced.region"):
+            return x * 2
+
+    assert int(f(jnp.int32(21))) == 42
+    assert int(f(jnp.int32(4))) == 8          # cached: no re-trace
+    s = tel.summary()["spans"]["traced.region"]
+    assert s.get("traced_count") == 1 and "count" not in s
+
+
+def test_module_default_configure(tmp_path):
+    tel = telemetry.default()
+    was = tel.enabled
+    try:
+        telemetry.configure(enabled=True)
+        with telemetry.span("mod.span"):
+            telemetry.count("mod.count")
+        assert telemetry.summary()["counters"]["mod.count"] == 1
+    finally:
+        telemetry.configure(enabled=was)
+        tel.reset()
+        tel.close()
+
+
+@pytest.mark.faults
+def test_fault_trace_survives_unflushed(tmp_path):
+    """Detection/rollback/quarantine events are on disk the instant they
+    are emitted (fsync), so the fault trace survives a process that dies
+    before any flush -- the scenario ``CAServeEngine.resume`` recovers
+    from."""
+    from repro.serve import CAServeEngine, Fault, FaultInjector, SimJob
+
+    path = str(tmp_path / "serve.jsonl")
+    tel = Telemetry(enabled=True, jsonl_path=path)
+    ckpt = str(tmp_path / "ckpt")
+    inj = FaultInjector([Fault(kind="bitflip", round=2, rule="fhp2",
+                               lane=0, bits=1, seed=7)])
+    eng = CAServeEngine(height=16, width=64, slots=2, depth=2,
+                        ckpt_dir=ckpt, ckpt_every=1, injector=inj,
+                        telemetry=tel)
+    eng.submit(SimJob(rid=0, scenario="cylinder", steps=12))
+    done = eng.drain()
+    assert len(done) == 1 and eng.stats["rollbacks"] == 1
+
+    # Read the sink path directly, *without* flushing or closing the
+    # writer: everything critical must already be durable.
+    recs = [json.loads(l) for l in open(path)]
+    crit = [r for r in recs if r.get("critical")]
+    names = {r["name"] for r in crit}
+    assert "serve.detection" in names and "serve.rollback" in names
+    rb = next(r for r in crit if r["name"] == "serve.rollback")
+    assert rb["attrs"]["steps_lost"] > 0
+
+    # The in-memory registry agrees, and the engine's fused-moment
+    # audits only fell back to recomputation on the corrupted round.
+    c = tel.summary()["counters"]
+    assert c["serve.audit.recomputed"] >= 1
+    assert c["serve.audit.fused"] >= 1
+    tel.close()
