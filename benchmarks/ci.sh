@@ -38,6 +38,15 @@
 # that the disabled-telemetry no-op cost stays a negligible fraction of
 # a CA step, and that both serve profiles carry a metrics block (rounds
 # / audits / rollbacks plus per-span p50/p99 from the telemetry rollup).
+# The SLO/overload gate: tier1 includes tests/test_slo.py (admission
+# control, fair scheduling, preemption bit-exactness, overload shedding
+# -- select alone with ``pytest -m slo``); bench_serve's overload
+# profile drives offered load >> capacity through a gold/bronze tenant
+# pair with seeded faults + stragglers and asserts the SLO contract
+# in-process, and the JSON check below asserts its record exists with
+# the high-priority p99 frame latency within SLO, typed shed/reject
+# counts, low-priority completions (non-starvation), and a Jain
+# fairness index above threshold.
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -103,13 +112,35 @@ assert srv.get("jobs_per_sec"), "serve headline has no throughput"
 assert srv.get("frame_lat_p99_s") is not None, "serve p99 latency missing"
 assert srv.get("recovery_overhead_pct") is not None, \
     "serve recovery overhead missing"
+assert srv.get("straggler_tax_pct") is not None, \
+    "serve straggler tax not split out of the recovery number"
 assert srv.get("recovered_bit_exact") is True, \
     "faulted serve run not bit-exact after recovery"
 assert srv.get("rollbacks", 0) >= 1, "faulted serve profile never rolled back"
+
+ov = [r for r in d["records"] if r.get("bench") == "serve"
+      and r.get("profile") == "overload"]
+assert ov, "no serve overload record"
+o = ov[0]
+assert o.get("p99_frame_latency") is not None, \
+    "overload record missing high-priority p99_frame_latency"
+assert o["p99_frame_latency"] <= o.get("hi_frame_slo_s", float("inf")), \
+    "high-priority p99 frame latency exceeds its SLO"
+assert o.get("shed_count", 0) >= 1, "overload bench never shed work"
+assert o.get("rejected", 0) >= 1, "overload bench never rejected work"
+assert o.get("lo_done", 0) >= 1, "low-priority tenant starved"
+assert o.get("jain_fairness", 0.0) >= 0.3, \
+    f"Jain fairness below threshold: {o.get('jain_fairness')}"
+assert o.get("completed_bit_exact") is True, \
+    "overload completions not bit-exact vs solo references"
+assert hl["serve"].get("overload"), "overload headline block missing"
 print("BENCH_kernel.json gate: headline + 2-D x-block + bml_city + "
       f"{len(pairs)} overlap pair(s) + serve "
       f"(recovery {srv['recovery_overhead_pct']:.1f}%, "
-      f"{srv['rollbacks']} rollback(s)) + observables "
+      f"straggler {srv['straggler_tax_pct']:.1f}%, "
+      f"{srv['rollbacks']} rollback(s)) + overload "
+      f"(p99 {o['p99_frame_latency']:.3f}s, shed {o['shed_count']}, "
+      f"jain {o['jain_fairness']:.2f}) + observables "
       f"(fused x{fused[0]['fused_vs_posthoc_speedup']:.2f} bit-exact, "
       f"telemetry noop {noop[0]['telemetry_noop_ns']:.0f}ns) present")
 EOF

@@ -88,9 +88,23 @@ def _headline(records):
                  "jobs_per_sec": c.get("jobs_per_sec"),
                  "frame_lat_p99_s": c.get("frame_lat_p99_s"),
                  "recovery_overhead_pct": f.get("recovery_overhead_pct"),
+                 "straggler_tax_pct": f.get("straggler_tax_pct"),
                  "rollbacks": f.get("rollbacks"),
                  "recovered_bit_exact": f.get("recovered_bit_exact"),
                  "smoke": c.get("smoke")}
+        if "overload" in srv:
+            o = srv["overload"]
+            # The SLO trajectory under offered load >> capacity: gold's
+            # p99 frame latency vs its SLO, bronze's completions (the
+            # non-starvation bound), typed sheds/rejects, and fairness.
+            serve["overload"] = {
+                "p99_frame_latency": o.get("p99_frame_latency"),
+                "hi_frame_slo_s": o.get("hi_frame_slo_s"),
+                "lo_done": o.get("lo_done"),
+                "shed_count": o.get("shed_count"),
+                "rejected": o.get("rejected"),
+                "preemptions": o.get("preemptions"),
+                "jain_fairness": o.get("jain_fairness")}
 
     return {"best_single_device": best(("kernel", "temporal")),
             "best_sharded": best(("distributed", "scenarios")),

@@ -2,5 +2,5 @@ from repro.checkpoint.store import (CheckpointError,  # noqa: F401
                                     CheckpointExistsError, CheckpointManager,
                                     ChecksumError, LeafMismatchError,
                                     ManifestError, latest_step,
-                                    latest_valid_step, load_meta, restore,
-                                    save, verify_checkpoint)
+                                    latest_valid_step, load_leaf, load_meta,
+                                    restore, save, verify_checkpoint)

@@ -241,8 +241,32 @@ def load_meta(directory: str, step: int) -> dict:
     return _load_manifest(step_dir(directory, step)).get("meta", {})
 
 
+def load_leaf(directory: str, step: int, key: str,
+              check: bool = True) -> np.ndarray:
+    """Load one leaf by its flattened key (e.g. ``"parked/7"``),
+    crc32-verified -- the serve layer restores parked-job lattices this
+    way, individually, without materialising a target tree."""
+    path = step_dir(directory, step)
+    manifest = _load_manifest(path)
+    if key not in manifest["leaves"]:
+        raise LeafMismatchError(key, "present in manifest", "missing",
+                                what="leaf")
+    info = manifest["leaves"][key]
+    try:
+        arr = np.load(os.path.join(path, info["file"]))
+    except (OSError, ValueError) as e:
+        raise LeafMismatchError(key, "loadable .npy",
+                                f"unreadable ({e})", what="file") from e
+    if check and "crc32" in info:
+        found = _crc(arr)
+        if found != info["crc32"]:
+            raise ChecksumError(key, info["crc32"], found)
+    return arr
+
+
 def restore(directory: str, step: int, target_tree: Any,
-            shardings: Any = None, check: bool = True) -> Any:
+            shardings: Any = None, check: bool = True,
+            strict: bool = True) -> Any:
     """Load a checkpoint into the structure of ``target_tree``.
 
     ``shardings`` (optional, same structure) resharding via device_put --
@@ -253,21 +277,29 @@ def restore(directory: str, step: int, target_tree: Any,
     manifest before placement (:class:`ChecksumError` on mismatch);
     structure and shape disagreements raise :class:`LeafMismatchError`
     with the offending key and expected-vs-found shapes.
+
+    ``strict=True`` (default) additionally requires the manifest's leaf
+    count to match the target exactly.  ``strict=False`` restores a
+    *subset*: every target leaf must still be present, shape-correct,
+    and checksum-clean, but the checkpoint may carry extra leaves (the
+    serve layer's parked-job lattices, loaded individually via
+    :func:`load_leaf`).
     """
     from repro import telemetry
     with telemetry.span("checkpoint.restore", step=step):
-        return _restore(directory, step, target_tree, shardings, check)
+        return _restore(directory, step, target_tree, shardings, check,
+                        strict)
 
 
 def _restore(directory: str, step: int, target_tree: Any,
-             shardings: Any, check: bool) -> Any:
+             shardings: Any, check: bool, strict: bool = True) -> Any:
     path = step_dir(directory, step)
     manifest = _load_manifest(path)
     flat_t, treedef = jax.tree.flatten(target_tree)
     keys = list(_flatten(target_tree).keys())
     if len(keys) != len(flat_t):
         raise LeafMismatchError(None, len(flat_t), len(keys), what="count")
-    if len(flat_t) != len(manifest["leaves"]):
+    if strict and len(flat_t) != len(manifest["leaves"]):
         raise LeafMismatchError(None, len(flat_t),
                                 len(manifest["leaves"]), what="count")
     out = []

@@ -9,8 +9,12 @@ fault injection and rollback-replay.
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` accordingly);
 ``--faults SEED`` drives a seeded fault schedule (bit flips + garbaged
 shards + torn checkpoints) through the run and reports detection /
-recovery statistics.  The LM decode demo lives in
-``examples/serve_lm.py``.
+recovery statistics.  ``--tenants`` splits the job mix across a
+priority-tiered gold/bronze tenant pair (gold preempts, bronze is
+rate-limited and queue-bounded) and prints the SLO/fairness report;
+``--deadline-s`` attaches a wall-clock deadline to every job (typed
+rejections and sheds are reported, not errors).  The LM decode demo
+lives in ``examples/serve_lm.py``.
 """
 from __future__ import annotations
 
@@ -37,12 +41,19 @@ def main(argv=None) -> int:
     ap.add_argument("--faults", type=int, default=None, metavar="SEED")
     ap.add_argument("--scenarios", nargs="*",
                     default=["cylinder", "bml_city"])
+    ap.add_argument("--tenants", action="store_true",
+                    help="gold/bronze multi-tenant demo with admission "
+                         "control and the SLO report")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-job wall-clock deadline")
+    ap.add_argument("--round-budget-s", type=float, default=None,
+                    help="arm overload degradation above this round wall")
     args = ap.parse_args(argv)
 
     import jax
 
-    from repro.serve import CAServeEngine, FaultInjector, SimJob, \
-        make_schedule
+    from repro.serve import AdmissionError, CAServeEngine, FaultInjector, \
+        SimJob, TenantConfig, make_schedule
 
     mesh = None
     if args.mesh:
@@ -61,16 +72,35 @@ def main(argv=None) -> int:
         injector = FaultInjector(make_schedule(
             args.faults, rounds, n_bitflip=1, n_nan=1, n_torn=1,
             lanes=args.slots))
+    tenants = None
+    if args.tenants:
+        tenants = {
+            "gold": TenantConfig("gold", priority=2, weight=2.0),
+            "bronze": TenantConfig("bronze", priority=1,
+                                   queue_limit=max(args.jobs, 2),
+                                   rate=50.0, burst=max(args.jobs, 2)),
+        }
     eng = CAServeEngine(
         height=args.height, width=args.width, slots=args.slots,
         mesh=mesh, depth=args.depth, use_pallas=args.use_pallas,
         ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
-        injector=injector)
+        injector=injector, tenants=tenants,
+        round_budget_s=args.round_budget_s)
+    admitted = 0
     for rid in range(args.jobs):
-        eng.submit(SimJob(rid=rid,
-                          scenario=args.scenarios[rid % len(args.scenarios)],
-                          steps=args.steps, frame_every=args.frame_every,
-                          overrides={"seed": rid}))
+        tenant = ("gold" if rid % 2 else "bronze") if args.tenants \
+            else "default"
+        try:
+            eng.submit(SimJob(
+                rid=rid,
+                scenario=args.scenarios[rid % len(args.scenarios)],
+                steps=args.steps, frame_every=args.frame_every,
+                overrides={"seed": rid}, tenant=tenant,
+                deadline_s=args.deadline_s))
+            admitted += 1
+        except AdmissionError as e:
+            print(f"rejected rid={rid}: {e.reason} "
+                  f"(retry_after_s={e.retry_after_s:.3g})")
     t0 = time.perf_counter()
     done = eng.drain()
     dt = time.perf_counter() - t0
@@ -85,6 +115,18 @@ def main(argv=None) -> int:
               f"rollbacks: {eng.stats['rollbacks']}; "
               f"steps replayed: {eng.stats['steps_replayed']}; "
               f"quarantined: {eng.stats['quarantined']}")
+    slo = eng.slo_report()
+    if args.tenants or args.deadline_s is not None:
+        print(f"slo: rejected={eng.stats['rejected']} "
+              f"shed={eng.stats['shed']} "
+              f"preemptions={eng.stats['preemptions']} "
+              f"deadline_miss={eng.stats['deadline_miss']} "
+              f"jain_fairness={slo['jain_fairness']:.3f}")
+        for name in sorted(slo["tenants"]):
+            d = slo["tenants"][name]
+            print(f"  tenant {name}: done={d['done']} shed={d['shed']} "
+                  f"rejected={d['rejected']} "
+                  f"work_steps={d['work_done_steps']}")
     return 0
 
 

@@ -1,7 +1,13 @@
-"""Serving engines: the CA simulation service (``engine``) and the
-LM decode engine the seed shipped with (``lm_engine``)."""
-from repro.serve.engine import (DONE, QUARANTINED, QUEUED,  # noqa: F401
-                                RUNNING, CAServeEngine, SimJob)
+"""Serving engines: the CA simulation service (``engine``), its
+admission-control / fair-scheduling layer (``admission``), and the LM
+decode engine the seed shipped with (``lm_engine``)."""
+from repro.serve.admission import (AdmissionError,  # noqa: F401
+                                   DeadlineInfeasible, QueueFull,
+                                   RateLimited, TenantConfig,
+                                   UnknownTenant, jain_index)
+from repro.serve.engine import (DONE, PARKED, QUARANTINED,  # noqa: F401
+                                QUEUED, RUNNING, SHED, CAServeEngine,
+                                DrainTimeout, SimJob)
 from repro.serve.faults import (Fault, FaultEvent,  # noqa: F401
                                 FaultInjector, SimulatedCrash,
                                 make_schedule)

@@ -1,6 +1,6 @@
 """Fault-tolerant CA simulation service: slot-based continuous batching
 of simulation jobs into the ensemble lane axis, with invariant-audited
-checkpoints and rollback-replay.
+checkpoints, rollback-replay, and SLO-driven admission control.
 
 Clients submit :class:`SimJob`\\ s -- ``(scenario, rule, params, steps)``
 from the scenario registry.  The engine packs live jobs into the ``B``
@@ -35,19 +35,50 @@ Robustness layer (why this is a *service* and not a batch script):
   is **quarantined** -- its lane zeroed and freed -- so one poisoned job
   degrades gracefully instead of sinking the whole batch.
 * **Crash resume.**  :meth:`CAServeEngine.resume` reconstructs the whole
-  engine (lane states, job bookkeeping, admission queue) from the last
-  valid checkpoint after a process death.
+  engine (lane states, job bookkeeping, admission queue, *lifetime
+  stats*) from the last valid checkpoint after a process death.
+
+Overload-robustness layer (PR 10 -- what makes it *operable*):
+
+* **Typed admission control** (``serve.admission``).  Per-tenant
+  token-bucket rate limits and bounded queues: ``submit`` raises
+  :class:`~repro.serve.admission.RateLimited` /
+  :class:`~repro.serve.admission.QueueFull` (each with a
+  ``retry_after_s`` backoff hint) instead of queueing unboundedly.
+  Deadline-aware admission consults a round-time model (roofline seed,
+  measured EWMA): a ``deadline_s`` that is provably unmeetable even
+  with zero queueing is refused at submit
+  (:class:`~repro.serve.admission.DeadlineInfeasible`).
+* **Multi-tenant fairness.**  Lane slots are assigned at round
+  boundaries by strict priority class and deficit-round-robin within a
+  class (work-proportional costs, aging guard against cross-class
+  starvation).  A higher-class job blocked behind a full lane group may
+  **preempt** a lower-class lane: the victim is *parked* -- its lattice
+  checkpointed bit-exactly at an audited round boundary -- and resumed
+  later in a fresh segment.  An RNG-free rule (e.g. BML, with
+  parity-preserving ``depth``) resumes bit-identical to an unpreempted
+  run; RNG rules resume bit-identical to their segmented solo replay
+  (the same contract rollback-replay already provides).
+* **Graceful degradation.**  Queued jobs whose deadline has become
+  unmeetable are **shed** (typed, logged); when round wall-clock
+  exceeds ``round_budget_s`` the engine sheds lowest-priority backlog
+  and *stretches* the frame/checkpoint cadence for a few rounds;
+  straggler rounds (wall >> rolling median, e.g. a ``slow_exchange``
+  hop) are detected and counted so one slow link is visible instead of
+  silently poisoning every co-batched lane's p99.
+* **SLO accounting.**  ``metrics()["slo"]`` reports per-tenant
+  throughput, frame-gap percentiles, deadline misses, sheds/rejects,
+  and the Jain fairness index over weighted per-tenant work.
 
 A :class:`repro.serve.faults.FaultInjector` can be attached to drive the
 deterministic fault schedule (bit flips, garbaged shards, torn
-checkpoints, kills, stragglers) that the tests and ``bench_serve``
-exercise recovery with.
+checkpoints, kills, stragglers, burst storms, poison pills) that the
+tests and ``bench_serve`` exercise recovery and overload behaviour with.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -57,9 +88,35 @@ import numpy as np
 from repro import telemetry as _telemetry
 from repro.checkpoint import store
 from repro.core import distributed, rulespec
+from repro.serve import admission as _adm
 
 QUEUED, RUNNING, DONE, QUARANTINED = \
     "queued", "running", "done", "quarantined"
+PARKED, SHED = "parked", "shed"
+
+
+class DrainTimeout(RuntimeError):
+    """``drain`` hit its round cap with live work still in flight.
+    Carries the stuck ``rids`` (running + queued + parked) and the
+    queue depth at timeout -- the caller can inspect, shed, or resume
+    instead of silently treating a wedged engine as drained."""
+
+    def __init__(self, rids: List[int], queue_depth: int, rounds: int):
+        self.rids = list(rids)
+        self.queue_depth = int(queue_depth)
+        self.rounds = int(rounds)
+        super().__init__(
+            f"drain exceeded {rounds} rounds with {len(self.rids)} live "
+            f"job(s) {self.rids} (queue depth {queue_depth})")
+
+
+# Runtime fields mirrored into checkpoint meta (everything a restart or
+# rollback needs to replay bit-exactly; ``parked_state`` lattices are
+# checkpoint *leaves*, not meta).
+_JOB_META_FIELDS = (
+    "status", "lane", "admitted_t", "steps_done", "expected",
+    "with_momentum", "tenant", "deadline_s", "frame_slo_s", "segments",
+    "preemptions", "submitted_wall", "enqueued_round")
 
 
 @dataclasses.dataclass
@@ -68,13 +125,19 @@ class SimJob:
     steps, with an observable frame streamed every ``frame_every``
     steps (0 = final state only).  ``overrides`` pass through to
     ``scenarios.get`` (density, seed, ... -- height/width are pinned by
-    the engine's lattice).  Runtime fields are engine-managed."""
+    the engine's lattice).  ``tenant`` names the admission contract
+    (default tenant = unlimited, the pre-SLO behaviour); ``deadline_s``
+    / ``frame_slo_s`` are wall-clock SLOs measured from submission.
+    Runtime fields are engine-managed."""
 
     rid: int
     scenario: str
     steps: int
     frame_every: int = 0
     overrides: dict = dataclasses.field(default_factory=dict)
+    tenant: str = "default"
+    deadline_s: Optional[float] = None
+    frame_slo_s: Optional[float] = None
     # --- runtime (engine-managed) ---
     status: str = QUEUED
     lane: int = -1
@@ -82,22 +145,31 @@ class SimJob:
     steps_done: int = 0
     expected: dict = dataclasses.field(default_factory=dict)
     with_momentum: bool = False
+    segments: list = dataclasses.field(default_factory=list)  # [[t0, n]..]
+    preemptions: int = 0
+    submitted_wall: float = 0.0
+    enqueued_round: int = 0
+    finished_wall: Optional[float] = None
+    deadline_met: Optional[bool] = None
+    frame_slo_violations: int = 0
+    shed_reason: Optional[str] = None
+    parked_state: Optional[np.ndarray] = None               # host lattice
     frames: dict = dataclasses.field(default_factory=dict)   # t -> frame
     result: Optional[np.ndarray] = None                      # final planes
 
     def to_meta(self) -> dict:
-        return {k: getattr(self, k) for k in
-                ("rid", "scenario", "steps", "frame_every", "overrides",
-                 "status", "lane", "admitted_t", "steps_done", "expected",
-                 "with_momentum")}
+        m = {k: getattr(self, k) for k in
+             ("rid", "scenario", "steps", "frame_every", "overrides")}
+        m.update({k: getattr(self, k) for k in _JOB_META_FIELDS})
+        return m
 
     @classmethod
     def from_meta(cls, m: dict) -> "SimJob":
         job = cls(rid=m["rid"], scenario=m["scenario"], steps=m["steps"],
                   frame_every=m["frame_every"], overrides=m["overrides"])
-        for k in ("status", "lane", "admitted_t", "steps_done",
-                  "expected", "with_momentum"):
-            setattr(job, k, m[k])
+        for k in _JOB_META_FIELDS:
+            if k in m:
+                setattr(job, k, m[k])
         return job
 
 
@@ -146,6 +218,14 @@ class CAServeEngine:
     ``audit_every`` / ``ckpt_every`` are in rounds, and checkpoints are
     only taken on audited-clean rounds (``ckpt_every`` must be a
     multiple of ``audit_every``).  ``mesh=None`` runs single-device.
+
+    Overload knobs: ``tenants`` maps name ->
+    :class:`~repro.serve.admission.TenantConfig` (omit for the
+    unlimited single-tenant legacy behaviour); ``round_budget_s`` arms
+    the degradation path (overload shedding + cadence stretch);
+    ``max_preemptions`` bounds how often one job may be parked (so
+    preemption cannot starve the low class it protects against);
+    ``starvation_rounds`` is the aging guard's promotion threshold.
     """
 
     def __init__(self, *, height: int, width: int, slots: int = 4,
@@ -154,7 +234,10 @@ class CAServeEngine:
                  use_pallas: bool = False, audit_every: int = 1,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  keep: int = 4, max_retries: int = 2, injector=None,
-                 telemetry=None):
+                 telemetry=None, tenants=None,
+                 round_budget_s: Optional[float] = None,
+                 max_preemptions: int = 2, max_preempt_per_round: int = 1,
+                 starvation_rounds: int = 8, stretch_rounds: int = 4):
         assert height % 2 == 0 and width % 32 == 0, (height, width)
         assert audit_every >= 1
         assert ckpt_every % audit_every == 0, \
@@ -172,26 +255,110 @@ class CAServeEngine:
         self.tel = telemetry if telemetry is not None \
             else _telemetry.default()
         self.round = 0                  # completed rounds
-        self.queue: deque = deque()
         self.jobs: Dict[int, SimJob] = {}
         self.groups: Dict[str, _LaneGroup] = {}
         self._retries: Dict[int, int] = {}   # survives rollback on purpose
         self._round_inv: Dict[str, tuple] = {}   # per-round audit cache
         self.detections: List[dict] = []
         self.frame_log: List[dict] = []
+        self.rejections: List[dict] = []     # typed admission refusals
+        self.shed_log: List[dict] = []       # typed load sheds
         self.stats = {"rounds": 0, "audits": 0, "audit_failures": 0,
                       "rollbacks": 0, "quarantined": 0, "jobs_done": 0,
-                      "steps_replayed": 0, "recovery": []}
+                      "steps_replayed": 0, "recovery": [],
+                      "rejected": 0, "shed": 0, "preemptions": 0,
+                      "resumed": 0, "deadline_miss": 0,
+                      "frame_slo_violations": 0, "stragglers_detected": 0,
+                      "overloaded_rounds": 0, "frames_deferred": 0,
+                      "ckpts_stretched": 0, "storm_submitted": 0,
+                      "storm_rejected": 0}
+        # --- admission / fairness / degradation ---
+        cfgs: Dict[str, _adm.TenantConfig] = {}
+        if tenants:
+            for cfg in (tenants.values() if isinstance(tenants, dict)
+                        else tenants):
+                cfgs[cfg.name] = cfg
+        self._strict_tenants = bool(cfgs)
+        if not cfgs:
+            cfgs = {"default": _adm.TenantConfig("default")}
+        self.sched = _adm.FairScheduler(cfgs)
+        self.model = _adm.RoundTimeModel(modeled_s=self._modeled_round_s())
+        self.admission = _adm.AdmissionController(self.sched, self.model)
+        self.round_budget_s = round_budget_s
+        self.max_preemptions = int(max_preemptions)
+        self.max_preempt_per_round = int(max_preempt_per_round)
+        self.starvation_rounds = int(starvation_rounds)
+        self.stretch_rounds = int(stretch_rounds)
+        self._overloaded_until = -1
+        self._round_walls: List[float] = []
+        self._last_frame_wall: Dict[int, float] = {}
 
     # ------------------------------------------------------------------
     # Submission / admission
     # ------------------------------------------------------------------
 
+    @property
+    def queue(self) -> List[int]:
+        """Ordered queued rids (read-only snapshot across the per-tenant
+        fair-scheduler queues)."""
+        return self.sched.rids()
+
+    def _modeled_round_s(self) -> float:
+        """Roofline seed for the round-time model: the sharded-traffic
+        model's total cost over this engine's lattice for one ``depth``
+        round.  Wildly optimistic on an interpret-mode CPU (it prices a
+        TPU) -- exactly what a *provable* infeasibility test wants
+        before the first measured round replaces it."""
+        try:
+            from repro.roofline import analysis
+            t = max(int(self.steps_per_launch or 1), 1)
+            terms = analysis.sharded_fhp_traffic(
+                self.height, self.width // 32, depth=self.depth,
+                T=min(t, self.height), block_rows=self.height)
+            return (terms["total_s_per_site"] * self.height * self.width
+                    * self.depth)
+        except Exception:
+            return 0.0
+
+    def _job_rounds(self, job: SimJob) -> int:
+        return -(-max(job.steps - job.steps_done, 0) // self.round_steps)
+
+    def _log_reject(self, job: SimJob, err: _adm.AdmissionError) -> None:
+        self.stats["rejected"] += 1
+        rec = dict(err.to_record(), round=self.round, wall=time.time())
+        self.rejections.append(rec)
+        self.tel.event("serve.reject", **rec)
+
     def submit(self, job: SimJob) -> SimJob:
+        """Admit ``job`` to its tenant's queue, or refuse with a typed
+        :class:`~repro.serve.admission.AdmissionError` (rate limit,
+        queue bound, or provably-unmeetable deadline).  Refused jobs are
+        never entered in the engine's bookkeeping."""
         assert job.rid not in self.jobs, f"duplicate rid {job.rid}"
+        tenant = job.tenant or "default"
+        if self._strict_tenants and tenant not in self.sched.tenants:
+            err = _adm.UnknownTenant(f"unknown tenant {tenant!r}",
+                                     tenant=tenant, rid=job.rid)
+            self._log_reject(job, err)
+            raise err
+        cfg = self.sched.ensure(tenant)
+        if job.frame_slo_s is None:
+            job.frame_slo_s = cfg.frame_slo_s
+        try:
+            self.admission.check(tenant=tenant, rid=job.rid,
+                                 rounds=self._job_rounds(job),
+                                 deadline_s=job.deadline_s)
+        except _adm.AdmissionError as err:
+            self._log_reject(job, err)
+            raise
+        job.submitted_wall = time.monotonic()
+        job.enqueued_round = self.round
         self.jobs[job.rid] = job
-        self.queue.append(job.rid)
+        self.sched.enqueue(tenant, job.rid)
         return job
+
+    def _alloc_rid(self) -> int:
+        return max(self.jobs, default=-1) + 1
 
     def _scenario(self, job: SimJob):
         from repro import scenarios
@@ -204,27 +371,174 @@ class CAServeEngine:
             self.groups[key] = _LaneGroup(self, sc.variant, sc.p_force)
         return self.groups[key]
 
+    # ------------------------------------------------------------------
+    # Shedding and degradation
+    # ------------------------------------------------------------------
+
+    def _shed(self, job: SimJob, reason: str) -> None:
+        self.sched.remove(job.rid)
+        job.status, job.shed_reason = SHED, reason
+        self.stats["shed"] += 1
+        rec = {"rid": job.rid, "tenant": job.tenant, "reason": reason,
+               "round": self.round}
+        self.shed_log.append(rec)
+        self.tel.event("serve.shed", **rec)
+
+    def _shed_unmeetable(self, now: float) -> None:
+        """Shed queued jobs whose deadline is provably lost: elapsed
+        wait plus the model's zero-queue best case already exceeds it.
+        Parked jobs are exempt -- they hold completed (audited) work."""
+        for rid in list(self.sched.rids()):
+            job = self.jobs[rid]
+            if job.deadline_s is None or job.status == PARKED:
+                continue
+            best = ((now - job.submitted_wall)
+                    + self.model.best_case_s(self._job_rounds(job)))
+            if best > job.deadline_s:
+                self._shed(job, "deadline_unmeetable")
+
+    def _stretching(self) -> bool:
+        return (self.round_budget_s is not None
+                and self.round <= self._overloaded_until)
+
+    def _shed_overload(self) -> None:
+        """Under a breached round budget with backlog beyond one wave of
+        lanes, drop the *newest* queued job of the lowest backlogged
+        priority class (one per round: bounded churn; oldest work and
+        parked jobs survive, and with multiple priority classes the top
+        class is never overload-shed -- it is who the shedding
+        protects)."""
+        cands = [rid for rid in self.sched.rids()
+                 if self.jobs[rid].status == QUEUED]
+        if not cands or len(self.sched) <= self.slots:
+            return
+        prio = lambda rid: self.sched.tenants[self.jobs[rid].tenant].priority
+        prios = {cfg.priority for cfg in self.sched.tenants.values()}
+        if len(prios) > 1:
+            cands = [r for r in cands if prio(r) < max(prios)]
+            if not cands:
+                return
+        low = min(prio(r) for r in cands)
+        victim = max((r for r in cands if prio(r) == low),
+                     key=lambda r: (self.jobs[r].enqueued_round, r))
+        self._shed(self.jobs[victim], "overload")
+
+    def _observe_round(self, dt: float) -> None:
+        """Feed the round-time model; flag stragglers (wall >> rolling
+        median); arm the degradation window on a budget breach."""
+        self.model.observe(dt)
+        prev = self._round_walls[-16:]
+        self._round_walls.append(dt)
+        del self._round_walls[:-64]
+        if len(prev) >= 4:
+            med = sorted(prev)[len(prev) // 2]
+            if dt > max(3.0 * med, med + 1e-3):
+                self.stats["stragglers_detected"] += 1
+                self.tel.event("serve.straggler", round=self.round,
+                               round_s=dt, median_s=med)
+        if self.round_budget_s is not None and dt > self.round_budget_s:
+            self.stats["overloaded_rounds"] += 1
+            self._overloaded_until = max(self._overloaded_until,
+                                         self.round + self.stretch_rounds)
+            self.tel.event("serve.overload", round=self.round, round_s=dt,
+                           budget_s=self.round_budget_s)
+
+    # ------------------------------------------------------------------
+    # Fair admission at round boundaries
+    # ------------------------------------------------------------------
+
     def _admit(self):
-        """Fill free lanes from the queue at this round boundary.  Each
-        queued job is attempted once in FIFO order; a job whose lane
-        group is full keeps its place without blocking jobs bound for
-        other groups."""
-        leftover = []
-        for _ in range(len(self.queue)):
-            rid = self.queue.popleft()
+        """Fill free lanes from the tenant queues at this round
+        boundary: shed unmeetable work, then attempt admission in
+        priority + deficit-round-robin order (aged jobs first).  A job
+        whose lane group is full may preempt a strictly-lower-priority
+        lane (audited boundaries only); otherwise it keeps its queue
+        position without blocking jobs bound for other groups."""
+        self._shed_unmeetable(time.monotonic())
+        if self._stretching():
+            self._shed_overload()
+        if not len(self.sched):
+            return
+        cost = lambda rid: float(max(self._job_rounds(self.jobs[rid]), 1))
+        aged = sorted(
+            (rid for rid in self.sched.rids()
+             if (self.round - self.jobs[rid].enqueued_round)
+             >= self.starvation_rounds),
+            key=lambda rid: (self.jobs[rid].enqueued_round, rid))
+        order = self.sched.order(cost, aged=aged)
+        preempted = 0
+        leftover: List[Tuple[str, int]] = []
+        for rid in order:
             job = self.jobs[rid]
             sc = self._scenario(job)
             g = self._group_for(sc)
             free = [i for i, s in enumerate(g.slots) if s is None]
+            if not free and preempted < self.max_preempt_per_round:
+                victim = self._pick_victim(job, g)
+                if victim is not None:
+                    free = [self._preempt(victim, g)]
+                    preempted += 1
             if not free:
-                leftover.append(rid)         # keep order; group is full
+                leftover.append((job.tenant, rid))
+                self.sched.refund(job.tenant, cost(rid))
                 continue
-            lane = free[0]
+            self._place_job(job, g, free[0], sc)
+        for tenant in {t for t, _ in leftover}:
+            self.sched.requeue_front(
+                tenant, [r for t, r in leftover if t == tenant])
+
+    def _pick_victim(self, job: SimJob,
+                     g: _LaneGroup) -> Optional[SimJob]:
+        """A running lane ``job`` may displace: strictly lower priority
+        class, preemption budget left, and only at a boundary the audit
+        has certified (the parked lattice must be known-good -- it is
+        the job's resume anchor)."""
+        if self.round % self.audit_every != 0:
+            return None
+        p = self.sched.tenants[job.tenant].priority
+        prio = lambda j: self.sched.tenants[j.tenant].priority
+        cands = [j for j in g.live_jobs()
+                 if prio(j) < p and j.preemptions < self.max_preemptions]
+        if not cands:
+            return None
+        return min(cands, key=lambda j: (prio(j), -self._job_rounds(j),
+                                         -j.rid))
+
+    def _preempt(self, victim: SimJob, g: _LaneGroup) -> int:
+        """Park ``victim``: host-checkpoint its lattice (audited-clean
+        by construction of the call site), zero and free the lane, and
+        requeue it at the head of its tenant queue for prompt resume."""
+        lane = victim.lane
+        victim.parked_state = np.asarray(g.state[lane])
+        g.state = g._place(g.state.at[lane].set(jnp.uint32(0)))
+        g.slots[lane] = None
+        g.last_moments = None
+        self._round_inv.pop(g.key(), None)
+        victim.status, victim.lane = PARKED, -1
+        victim.preemptions += 1
+        victim.enqueued_round = self.round
+        self.stats["preemptions"] += 1
+        self.sched.enqueue(victim.tenant, victim.rid, front=True)
+        self.tel.event("serve.preempt", rid=victim.rid, round=self.round,
+                       steps_done=victim.steps_done, tenant=victim.tenant)
+        return lane
+
+    def _place_job(self, job: SimJob, g: _LaneGroup, lane: int, sc):
+        """Admit into ``lane``: fresh jobs record their invariants;
+        parked jobs resume from their bit-exact parked lattice in a new
+        ``(t0, steps)`` segment."""
+        t = self.round * self.round_steps
+        if job.status == PARKED and job.parked_state is not None:
+            planes = jnp.asarray(job.parked_state)
+            job.parked_state = None
+            self.stats["resumed"] += 1
+            self.tel.event("serve.resume", rid=job.rid, round=self.round,
+                           steps_done=job.steps_done)
+        else:
             planes = sc.initial_planes()
-            g.state = g._place(g.state.at[lane].set(planes))
-            job.status, job.lane = RUNNING, lane
-            job.admitted_t = self.round * self.round_steps
+            job.admitted_t = t
             job.steps_done = 0
+            job.segments = []
             spec = g.spec
             # Momentum is only conserved on a free torus without forcing.
             job.with_momentum = bool(
@@ -234,91 +548,195 @@ class CAServeEngine:
                                       with_momentum=job.with_momentum)
             job.expected = {k: np.asarray(v).tolist()
                             for k, v in inv.items()}
-            g.slots[lane] = job
-        self.queue.extendleft(reversed(leftover))
+        g.state = g._place(g.state.at[lane].set(planes))
+        job.status, job.lane = RUNNING, lane
+        job.segments.append([t, 0])
+        g.slots[lane] = job
 
     # ------------------------------------------------------------------
     # The round loop
     # ------------------------------------------------------------------
 
     def tick(self):
-        """One engine round: (maybe) crash/straggle, admit, advance every
-        live group ``depth`` steps (collecting the end-of-round fused
-        moments), inject state faults, audit, recover or
-        stream/retire/checkpoint."""
+        """One engine round: (maybe) crash/straggle/storm, admit (with
+        shedding and preemption), advance every live group ``depth``
+        steps (collecting the end-of-round fused moments), inject state
+        faults, audit, recover or stream/retire/checkpoint."""
         rnd = self.round
         tel = self.tel
-        with tel.span("serve.round", round=rnd):
-            if self.injector is not None:
-                self.injector.before_round(rnd)  # may raise SimulatedCrash
-            with tel.span("serve.admit"):
-                self._admit()
-            t = rnd * self.round_steps
-            for g in self.groups.values():
-                if not g.live_jobs():
-                    continue
-                with tel.span("serve.kernel", group=g.key(),
-                              steps=self.round_steps):
-                    state, mom = g.run(g.state, t)
-                    if tel.enabled:
-                        jax.block_until_ready(state)
-                g.state = state
-                g.last_moments = np.asarray(mom[..., -1, :])
-                g.moments_dirty = False
-                if self.injector is not None:
-                    host = np.asarray(g.state)
-                    bad = self.injector.corrupt(host, g.variant, rnd)
-                    if bad is not host:
-                        g.state = g._place(jnp.asarray(bad))
-                        # The fused moments predate this corruption: the
-                        # audit must recompute from the state this round.
-                        g.moments_dirty = True
-            self.round = rnd + 1
-            self.stats["rounds"] += 1
-            for g in self.groups.values():
-                for job in g.live_jobs():
-                    job.steps_done += self.round_steps
+        t_wall = time.monotonic()
+        try:
+            with tel.span("serve.round", round=rnd):
+                self._tick_body(rnd, tel)
+        finally:
+            self._observe_round(time.monotonic() - t_wall)
 
-            self._round_inv = {}
-            if self.round % self.audit_every == 0:
-                with tel.span("serve.audit"):
-                    violations = self._audit()
-                self.stats["audits"] += 1
-                if violations:
-                    self.stats["audit_failures"] += 1
-                    with tel.span("serve.rollback"):
-                        self._recover(violations)
-                    return
-            with tel.span("serve.frames"):
-                self._stream_frames()
-            with tel.span("serve.retire"):
-                self._retire()
-            if (self.ckpt_dir and self.ckpt_every
-                    and self.round % self.ckpt_every == 0):
+    def _tick_body(self, rnd: int, tel):
+        if self.injector is not None:
+            self.injector.before_round(rnd)  # may raise SimulatedCrash
+            self._storm(rnd)
+        with tel.span("serve.admit"):
+            self._admit()
+        t = rnd * self.round_steps
+        for g in self.groups.values():
+            if not g.live_jobs():
+                continue
+            with tel.span("serve.kernel", group=g.key(),
+                          steps=self.round_steps):
+                state, mom = g.run(g.state, t)
+                if tel.enabled:
+                    jax.block_until_ready(state)
+            g.state = state
+            g.last_moments = np.asarray(mom[..., -1, :])
+            g.moments_dirty = False
+            if self.injector is not None:
+                host = np.asarray(g.state)
+                bad = self.injector.corrupt(
+                    host, g.variant, rnd,
+                    lanes_by_rid={j.rid: j.lane for j in g.live_jobs()})
+                if bad is not host:
+                    g.state = g._place(jnp.asarray(bad))
+                    # The fused moments predate this corruption: the
+                    # audit must recompute from the state this round.
+                    g.moments_dirty = True
+        self.round = rnd + 1
+        self.stats["rounds"] += 1
+        for g in self.groups.values():
+            for job in g.live_jobs():
+                job.steps_done += self.round_steps
+                job.segments[-1][1] += self.round_steps
+
+        self._round_inv = {}
+        if self.round % self.audit_every == 0:
+            with tel.span("serve.audit"):
+                violations = self._audit()
+            self.stats["audits"] += 1
+            if violations:
+                self.stats["audit_failures"] += 1
+                with tel.span("serve.rollback"):
+                    self._recover(violations)
+                return
+        with tel.span("serve.frames"):
+            self._stream_frames()
+        with tel.span("serve.retire"):
+            self._retire()
+        if self.ckpt_dir and self.ckpt_every:
+            every = self.ckpt_every * (2 if self._stretching() else 1)
+            if self.round % every == 0:
                 with tel.span("serve.checkpoint", round=self.round):
                     self._checkpoint()
+            elif (self._stretching()
+                  and self.round % self.ckpt_every == 0):
+                self.stats["ckpts_stretched"] += 1
+
+    def _storm(self, rnd: int) -> None:
+        """Submit this round's burst-storm jobs through the *public*
+        admission path: typed rejections are the expected outcome under
+        a storm -- that is the backpressure the fault exercises."""
+        storm = getattr(self.injector, "storm", None)
+        if storm is None:
+            return
+        for spec in storm(rnd):
+            job = SimJob(rid=self._alloc_rid(),
+                         scenario=spec.get("scenario", "cylinder"),
+                         steps=int(spec.get("steps", 8)),
+                         frame_every=int(spec.get("frame_every", 0)),
+                         overrides={"seed": int(spec.get("seed", 0))},
+                         tenant=spec.get("tenant") or "default",
+                         deadline_s=spec.get("deadline_s"))
+            try:
+                self.submit(job)
+                self.stats["storm_submitted"] += 1
+            except _adm.AdmissionError:
+                self.stats["storm_rejected"] += 1  # logged by submit
 
     def drain(self, max_rounds: int = 10_000) -> List[SimJob]:
-        """Run rounds until every submitted job is done or quarantined."""
+        """Run rounds until every submitted job is done, shed, or
+        quarantined; raise :class:`DrainTimeout` (carrying the stuck
+        rids and queue depth) if the cap is hit with work in flight."""
         rounds = 0
-        while (self.queue or any(g.live_jobs()
-                                 for g in self.groups.values())):
-            assert rounds < max_rounds, "drain exceeded max_rounds"
+        while (len(self.sched) or any(g.live_jobs()
+                                      for g in self.groups.values())):
+            if rounds >= max_rounds:
+                stuck = sorted(j.rid for j in self.jobs.values()
+                               if j.status in (QUEUED, RUNNING, PARKED))
+                raise DrainTimeout(stuck, len(self.sched), rounds)
             self.tick()
             rounds += 1
         return [j for j in self.jobs.values() if j.status == DONE]
 
     def metrics(self) -> dict:
-        """Operational counters plus the telemetry span rollup -- the
-        ``metrics`` block the serve benchmarks record and a scrape
-        endpoint would export."""
+        """Operational counters plus the SLO block and the telemetry
+        span rollup -- the ``metrics`` block the serve benchmarks record
+        and a scrape endpoint would export."""
         out = {k: v for k, v in self.stats.items() if k != "recovery"}
         out["round"] = self.round
         out["detections"] = len(self.detections)
         out["frames"] = len(self.frame_log)
+        out["queue_depth"] = len(self.sched)
+        out["slo"] = self.slo_report()
         if self.tel.enabled:
             out["telemetry"] = self.tel.summary()
         return out
+
+    def slo_report(self) -> dict:
+        """Per-tenant SLO accounting: throughput (done / shed / rejected
+        / work steps), deadline misses, frame-gap percentiles, and the
+        Jain fairness index over weight-normalised completed work."""
+        per: Dict[str, dict] = {}
+
+        def bucket(t: str) -> dict:
+            return per.setdefault(t, {
+                "submitted": 0, "done": 0, "shed": 0, "quarantined": 0,
+                "live": 0, "rejected": 0, "work_done_steps": 0,
+                "deadline_miss": 0, "frame_slo_violations": 0,
+                "preemptions": 0, "frame_gap_p50_s": None,
+                "frame_gap_p99_s": None})
+
+        for job in self.jobs.values():
+            d = bucket(job.tenant)
+            d["submitted"] += 1
+            d["preemptions"] += job.preemptions
+            d["frame_slo_violations"] += job.frame_slo_violations
+            if job.status == DONE:
+                d["done"] += 1
+                d["work_done_steps"] += job.steps
+                if job.deadline_met is False:
+                    d["deadline_miss"] += 1
+            elif job.status == SHED:
+                d["shed"] += 1
+            elif job.status == QUARANTINED:
+                d["quarantined"] += 1
+            else:
+                d["live"] += 1
+                d["work_done_steps"] += job.steps_done
+        for rec in self.rejections:
+            bucket(rec.get("tenant") or "default")["rejected"] += 1
+        gaps: Dict[str, List[float]] = {}
+        last: Dict[int, float] = {}
+        for e in self.frame_log:
+            rid = e["rid"]
+            job = self.jobs.get(rid)
+            if job is None:
+                continue
+            if rid in last:
+                gaps.setdefault(job.tenant, []).append(
+                    e["wall"] - last[rid])
+            last[rid] = e["wall"]
+        for t, gs in gaps.items():
+            gs = sorted(gs)
+            n = len(gs)
+            per[t]["frame_gap_p50_s"] = gs[(n - 1) // 2]
+            per[t]["frame_gap_p99_s"] = gs[min(n - 1, (99 * n) // 100)]
+        active = [t for t, d in per.items() if d["submitted"]]
+        fair = _adm.jain_index(
+            [per[t]["work_done_steps"]
+             / max(self.sched.tenants[t].weight, 1e-9)
+             if t in self.sched.tenants else per[t]["work_done_steps"]
+             for t in active])
+        return {"tenants": per, "jain_fairness": fair,
+                "round_s_model": self.model.round_s(),
+                "round_s_measured_n": self.model.n_observed}
 
     # ------------------------------------------------------------------
     # Audits and recovery
@@ -422,8 +840,7 @@ class CAServeEngine:
             if job.status == RUNNING:
                 self._quarantine(job)
             else:
-                if rid in self.queue:
-                    self.queue.remove(rid)
+                self.sched.remove(rid)
                 job.status = QUARANTINED
                 self.stats["quarantined"] += 1
                 self.tel.event("serve.quarantine", critical=True, rid=rid,
@@ -449,6 +866,7 @@ class CAServeEngine:
         self._round_inv.pop(g.key(), None)
         job.admitted_t = self.round * self.round_steps
         job.steps_done = 0
+        job.segments = [[job.admitted_t, 0]]
         job.frames.clear()
 
     # ------------------------------------------------------------------
@@ -457,6 +875,17 @@ class CAServeEngine:
 
     def _stream_frames(self):
         from repro.scenarios import observables
+        if self._stretching() and self.round % 2 == 1:
+            # Degradation: halve the observable cadence while the round
+            # budget is breached -- deferred frames are counted, not
+            # silently dropped.
+            deferred = sum(
+                1 for g in self.groups.values() for j in g.live_jobs()
+                if j.frame_every and not j.steps_done % j.frame_every)
+            if deferred:
+                self.stats["frames_deferred"] += deferred
+                self.tel.count("serve.frames_deferred", deferred)
+            return
         t = self.round * self.round_steps
         for g in self.groups.values():
             due = [j for j in g.live_jobs() if j.frame_every
@@ -474,9 +903,16 @@ class CAServeEngine:
                 frame["step"] = job.steps_done
                 job.frames[job.steps_done] = frame
                 self.tel.count("serve.frames")
+                wall = time.perf_counter()
+                prev = self._last_frame_wall.get(job.rid)
+                self._last_frame_wall[job.rid] = wall
+                if (prev is not None and job.frame_slo_s is not None
+                        and wall - prev > job.frame_slo_s):
+                    job.frame_slo_violations += 1
+                    self.stats["frame_slo_violations"] += 1
                 self.frame_log.append(
                     {"rid": job.rid, "round": self.round,
-                     "wall": time.perf_counter(), "frame": frame,
+                     "wall": wall, "frame": frame,
                      "metrics": {"rollbacks": self.stats["rollbacks"],
                                  "quarantined": self.stats["quarantined"],
                                  "audits": self.stats["audits"]}})
@@ -494,22 +930,48 @@ class CAServeEngine:
                 g.state = g._place(g.state.at[lane].set(jnp.uint32(0)))
                 if first_finish:    # replays re-retire; count jobs once
                     self.stats["jobs_done"] += 1
+                    job.finished_wall = time.monotonic()
+                    if job.deadline_s is not None:
+                        job.deadline_met = (
+                            job.finished_wall - job.submitted_wall
+                            <= job.deadline_s)
+                        if not job.deadline_met:
+                            self.stats["deadline_miss"] += 1
+                            self.tel.event("serve.deadline_miss",
+                                           rid=job.rid, tenant=job.tenant)
 
     # ------------------------------------------------------------------
     # Checkpoint / restore
     # ------------------------------------------------------------------
 
+    def _parked_jobs(self) -> List[SimJob]:
+        return [j for j in self.jobs.values()
+                if j.status == PARKED and j.parked_state is not None]
+
     def _meta(self) -> dict:
         return {"round": self.round,
                 "engine": {"height": self.height, "width": self.width,
-                           "slots": self.slots, "depth": self.depth},
+                           "slots": self.slots, "depth": self.depth,
+                           "tenants": {n: dataclasses.asdict(c)
+                                       for n, c in
+                                       self.sched.tenants.items()}},
                 "groups": {k: {"variant": g.variant, "p_force": g.p_force}
                            for k, g in self.groups.items()},
                 "jobs": [j.to_meta() for j in self.jobs.values()],
-                "queue": list(self.queue)}
+                "queue": self.sched.rids(),
+                # Lifetime counters survive process death: ``resume``
+                # seeds from here, so rollbacks/quarantines/jobs_done
+                # report true totals, not since-restart ones.
+                "stats": {k: v for k, v in self.stats.items()
+                          if not isinstance(v, list)}}
 
     def _checkpoint(self):
         tree = {"groups": {k: g.state for k, g in self.groups.items()}}
+        parked = self._parked_jobs()
+        if parked:
+            # Parked lattices are checkpoint *leaves* (crc32-verified),
+            # so a preempted job survives process death too.
+            tree["parked"] = {str(j.rid): j.parked_state for j in parked}
         path = store.save(self.ckpt_dir, self.round, tree,
                           meta=self._meta(), overwrite=True)
         if self.injector is not None:
@@ -533,7 +995,10 @@ class CAServeEngine:
         if self.mesh is not None:
             shardings = {"groups": {k: g.sharding
                                     for k, g in self.groups.items()}}
-        restored = store.restore(self.ckpt_dir, step, target, shardings)
+        # strict=False: the checkpoint may carry parked-lattice leaves
+        # beyond the groups tree; they are loaded individually below.
+        restored = store.restore(self.ckpt_dir, step, target, shardings,
+                                 strict=False)
         for k, g in self.groups.items():
             g.state = restored["groups"][k]
             g.slots = [None] * self.slots
@@ -541,21 +1006,29 @@ class CAServeEngine:
         self._round_inv = {}
         self.round = meta["round"]
         by_rid = {m["rid"]: m for m in meta["jobs"]}
-        self.queue.clear()
+        self.sched.clear()
         for rid in meta["queue"]:
-            self.queue.append(rid)
+            m = by_rid.get(rid)
+            tenant = m["tenant"] if m else self.jobs[rid].tenant
+            self.sched.enqueue(tenant, rid)
         for rid, job in sorted(self.jobs.items()):
             m = by_rid.get(rid)
             if m is None:
                 # Submitted after the checkpoint: back to the queue.
                 job.status, job.lane = QUEUED, -1
                 job.steps_done = 0
+                job.segments = []
+                job.parked_state = None
+                job.enqueued_round = self.round
                 job.frames.clear()
-                self.queue.append(rid)
+                self.sched.enqueue(job.tenant, rid)
                 continue
-            for k in ("status", "lane", "admitted_t", "steps_done",
-                      "expected", "with_momentum"):
-                setattr(job, k, m[k])
+            for k in _JOB_META_FIELDS:
+                if k in m:
+                    setattr(job, k, m[k])
+            job.parked_state = (
+                store.load_leaf(self.ckpt_dir, step, f"parked/{rid}")
+                if job.status == PARKED else None)
             if job.status == RUNNING:
                 g = self.groups[self._job_group_key(rid)]
                 g.slots[job.lane] = job
@@ -573,17 +1046,28 @@ class CAServeEngine:
                **kw) -> "CAServeEngine":
         """Rebuild a crashed engine from the last *valid* checkpoint in
         ``ckpt_dir`` (torn/corrupt ones are skipped).  Jobs that were
-        queued resume queued; running jobs replay from the audited
-        anchor bit-exactly."""
+        queued resume queued, parked jobs resume parked (their lattices
+        are checkpoint leaves), running jobs replay from the audited
+        anchor bit-exactly, and the lifetime ``stats`` counters carry
+        over.  Deadline clocks restart at resume (the monotonic epoch
+        does not survive the process)."""
         step = store.latest_valid_step(ckpt_dir)
         assert step is not None, f"no valid checkpoint under {ckpt_dir}"
         meta = store.load_meta(ckpt_dir, step)
         e = meta["engine"]
+        if "tenants" not in kw and e.get("tenants"):
+            kw["tenants"] = {n: _adm.TenantConfig(**c)
+                             for n, c in e["tenants"].items()}
         eng = cls(height=e["height"], width=e["width"], slots=e["slots"],
                   depth=e["depth"], mesh=mesh, ckpt_dir=ckpt_dir,
                   injector=injector, **kw)
+        for k, v in meta.get("stats", {}).items():
+            if k in eng.stats and not isinstance(eng.stats[k], list):
+                eng.stats[k] = v
+        now = time.monotonic()
         for m in meta["jobs"]:
             job = SimJob.from_meta(m)
+            job.submitted_wall = now
             eng.jobs[job.rid] = job
         for k, ginfo in meta["groups"].items():
             eng.groups[k] = _LaneGroup(eng, ginfo["variant"],
@@ -592,13 +1076,17 @@ class CAServeEngine:
         shardings = ({"groups": {k: g.sharding
                                  for k, g in eng.groups.items()}}
                      if mesh is not None else None)
-        restored = store.restore(ckpt_dir, step, target, shardings)
+        restored = store.restore(ckpt_dir, step, target, shardings,
+                                 strict=False)
         for k, g in eng.groups.items():
             g.state = restored["groups"][k]
         eng.round = meta["round"]
         for rid in meta["queue"]:
-            eng.queue.append(rid)
+            eng.sched.enqueue(eng.jobs[rid].tenant, rid)
         for job in eng.jobs.values():
             if job.status == RUNNING:
                 eng.groups[eng._job_group_key(job.rid)].slots[job.lane] = job
+            elif job.status == PARKED:
+                job.parked_state = store.load_leaf(
+                    ckpt_dir, step, f"parked/{job.rid}")
         return eng

@@ -30,7 +30,19 @@ Kinds:
                          last valid checkpoint);
 * ``slow_exchange``   -- sleep ``delay_s`` before the round (a straggler
                          hop: hurts p99 frame latency, corrupts
-                         nothing).
+                         nothing);
+* ``burst_storm``     -- a client-side overload fault: submit ``jobs``
+                         adversarial jobs through the engine's *public*
+                         admission path at the firing round (typed
+                         rejections are the expected -- and asserted --
+                         outcome: this fault exercises backpressure, not
+                         corruption);
+* ``poison_pill``     -- a *persistent* per-job fault: flip bits in the
+                         lane of one ``rid`` on **every** round it is
+                         live, rollback-replays included.  No amount of
+                         replay runs clean, which is exactly what drives
+                         the bounded-retry / quarantine path without
+                         collateral damage to co-batched lanes.
 
 State-corrupting faults (``bitflip``, ``nan_shard``) fire **once** by
 default and are consumed: the rollback-replay of the same rounds then
@@ -50,7 +62,10 @@ import numpy as np
 NAN_WORD = 0x7FC00000  # float32 quiet-NaN bit pattern, as a uint32 word
 
 STATE_KINDS = ("bitflip", "nan_shard")
-KINDS = STATE_KINDS + ("torn_checkpoint", "killed_step", "slow_exchange")
+KINDS = STATE_KINDS + ("torn_checkpoint", "killed_step", "slow_exchange",
+                       "burst_storm", "poison_pill")
+# Kinds the lattice audits are expected to detect.
+CORRUPT_KINDS = STATE_KINDS + ("poison_pill",)
 
 
 class SimulatedCrash(RuntimeError):
@@ -70,10 +85,13 @@ class Fault:
     rule: str = ""
     lane: int = 0
     plane: int = 0
-    bits: int = 1            # bitflip: how many bits to flip
+    bits: int = 1            # bitflip/poison_pill: how many bits to flip
     rows: int = 2            # nan_shard: height of the garbaged band
     delay_s: float = 0.0     # slow_exchange
     sticky: bool = False     # re-fire on replay (persistent fault)
+    jobs: int = 0            # burst_storm: storm size
+    tenant: str = ""         # burst_storm: tenant the storm submits as
+    rid: int = -1            # poison_pill: the poisoned job
     seed: int = 0
     fired: int = 0           # times this fault has fired (bookkeeping)
 
@@ -135,15 +153,62 @@ class FaultInjector:
             self.events.append(FaultEvent(f.kind, rnd, f.rule, f.lane, {}))
             raise SimulatedCrash(f"killed_step fault at round {rnd}")
 
-    def corrupt(self, state: np.ndarray, rule: str, rnd: int) -> np.ndarray:
+    def storm(self, rnd: int) -> List[dict]:
+        """This round's ``burst_storm`` job specs: the engine submits
+        them through its public admission path (so every one is rate-
+        limited / queue-bounded / deadline-checked like a real client's).
+        Each spec is seeded from the fault's counter RNG -- the same
+        storm hits the same engine identically every run."""
+        specs: List[dict] = []
+        for f in self._due(("burst_storm",), rnd):
+            rng = f._rng()
+            f.fired += 1
+            n = max(int(f.jobs), 1)
+            self.events.append(FaultEvent(f.kind, rnd, f.rule, f.lane,
+                                          {"jobs": n, "tenant": f.tenant}))
+            for _ in range(n):
+                specs.append({"scenario": "cylinder",
+                              "steps": int(4 + 2 * rng.integers(4)),
+                              "tenant": f.tenant or None,
+                              "seed": int(rng.integers(2 ** 31))})
+        return specs
+
+    def _due_poison(self, rnd: int, lanes_by_rid) -> List[Fault]:
+        if not lanes_by_rid:
+            return []
+        return [f for f in self.schedule
+                if f.kind == "poison_pill" and rnd >= f.round
+                and f.rid in lanes_by_rid]
+
+    def corrupt(self, state: np.ndarray, rule: str, rnd: int,
+                lanes_by_rid: Optional[dict] = None) -> np.ndarray:
         """Apply this round's state faults for ``rule`` to a host copy of
         the ``(B, n_planes, H, Wd)`` uint32 lane stack; returns the
-        (possibly) corrupted array."""
+        (possibly) corrupted array.  ``lanes_by_rid`` (rid -> lane of the
+        group's live jobs) lets ``poison_pill`` faults track their target
+        across re-slotting; without it they are inert."""
         faults = self._due(STATE_KINDS, rnd, rule=rule)
-        if not faults:
+        poison = [f for f in self._due_poison(rnd, lanes_by_rid)
+                  if not f.rule or f.rule == rule]
+        if not faults and not poison:
             return state
         state = np.array(state, copy=True)
         b, n_planes, h, wd = state.shape[-4:]
+        for f in poison:
+            # Re-key the RNG on the firing count: every live round (and
+            # every replay of it) flips fresh deterministic positions.
+            rng = np.random.default_rng(
+                (f.seed, KINDS.index(f.kind), rnd, f.fired))
+            lane = lanes_by_rid[f.rid] % b
+            plane = f.plane % n_planes
+            detail = {"rid": f.rid, "plane": plane, "positions": []}
+            for _ in range(f.bits):
+                y, xw, bit = (int(rng.integers(h)), int(rng.integers(wd)),
+                              int(rng.integers(32)))
+                state[..., lane, plane, y, xw] ^= np.uint32(1 << bit)
+                detail["positions"].append([y, xw, bit])
+            f.fired += 1
+            self.events.append(FaultEvent(f.kind, rnd, rule, lane, detail))
         for f in faults:
             rng = f._rng()
             lane = f.lane % b
@@ -187,20 +252,23 @@ class FaultInjector:
 
     def corruption_events(self) -> List[FaultEvent]:
         """Firings the lattice audits are expected to detect (state
-        faults only -- torn checkpoints surface at rollback, crashes and
-        stragglers are not corruption)."""
-        return [e for e in self.events if e.kind in STATE_KINDS]
+        faults and poison pills -- torn checkpoints surface at rollback;
+        crashes, stragglers, and storms are not corruption)."""
+        return [e for e in self.events if e.kind in CORRUPT_KINDS]
 
 
 def make_schedule(seed: int, rounds: int, *, rules: Sequence[str] = ("",),
                   n_bitflip: int = 1, n_nan: int = 1, n_torn: int = 0,
                   n_kill: int = 0, n_slow: int = 0,
                   delay_s: float = 0.002, lanes: int = 1,
-                  first_round: int = 1) -> List[Fault]:
+                  first_round: int = 1, n_storm: int = 0,
+                  storm_jobs: int = 6, storm_tenant: str = "",
+                  poison_rids: Sequence[int] = ()) -> List[Fault]:
     """A reproducible random schedule over ``rounds`` engine rounds:
     the bench's synthetic fault load.  Faults land in
     ``[first_round, rounds)`` at seeded positions; one-shot (transient)
-    by construction."""
+    by construction, except ``poison_pill``\\ s (one per rid in
+    ``poison_rids``), which are persistent by definition."""
     rng = np.random.default_rng(seed)
     out: List[Fault] = []
     span = max(rounds - first_round, 1)
@@ -213,13 +281,19 @@ def make_schedule(seed: int, rounds: int, *, rules: Sequence[str] = ("",),
 
     for kind, n in (("bitflip", n_bitflip), ("nan_shard", n_nan),
                     ("torn_checkpoint", n_torn), ("killed_step", n_kill),
-                    ("slow_exchange", n_slow)):
+                    ("slow_exchange", n_slow), ("burst_storm", n_storm)):
         for r in rounds_for(n):
             rule = rules[int(rng.integers(len(rules)))]
             out.append(Fault(kind=kind, round=r, rule=rule,
                              lane=int(rng.integers(lanes)),
                              plane=int(rng.integers(8)),
                              bits=1 + 2 * int(rng.integers(2)),
-                             delay_s=delay_s,
+                             delay_s=delay_s, jobs=storm_jobs,
+                             tenant=storm_tenant,
                              seed=int(rng.integers(2**31))))
+    for rid in poison_rids:
+        out.append(Fault(kind="poison_pill", round=first_round, rid=rid,
+                         plane=int(rng.integers(8)),
+                         bits=1 + 2 * int(rng.integers(2)), sticky=True,
+                         seed=int(rng.integers(2**31))))
     return sorted(out, key=lambda f: (f.round, f.kind))

@@ -6,7 +6,7 @@ disabled -- a true no-op -- until ``telemetry.configure(...)`` turns it
 on (the serve engine and ``benchmarks/run.py --profile`` both do).
 """
 from repro.telemetry.core import (Telemetry, configure, count, default,
-                                  event, gauge, span, summary)
+                                  event, gauge, span, span_stats, summary)
 
 __all__ = ["Telemetry", "configure", "count", "default", "event", "gauge",
-           "span", "summary"]
+           "span", "span_stats", "summary"]

@@ -49,7 +49,7 @@ import time
 from typing import Dict, List, Optional
 
 __all__ = ["Telemetry", "configure", "default", "span", "count", "gauge",
-           "event", "summary"]
+           "event", "summary", "span_stats"]
 
 
 def _tracing() -> bool:
@@ -266,6 +266,21 @@ class Telemetry:
                     "gauges": dict(self._gauges),
                     "events": len(self._events)}
 
+    def span_stats(self, name: str) -> Optional[Dict]:
+        """Rollup for one span name -- ``{count, p50_s, p99_s, max_s}``
+        or None if never recorded.  The serve layer's straggler detector
+        and SLO report read single spans this way without paying for the
+        full :meth:`summary` walk."""
+        with self._lock:
+            durs = self._durs.get(name)
+            if not durs:
+                return None
+            d = sorted(durs)
+            n = len(d)
+            return {"count": n, "p50_s": d[(n - 1) // 2],
+                    "p99_s": d[min(n - 1, (99 * n) // 100)],
+                    "max_s": d[-1]}
+
     def events(self, name: Optional[str] = None) -> List[Dict]:
         with self._lock:
             return [e for e in self._events
@@ -328,3 +343,7 @@ def event(name: str, critical: bool = False, **attrs) -> None:
 
 def summary() -> Dict:
     return _default.summary()
+
+
+def span_stats(name: str) -> Optional[Dict]:
+    return _default.span_stats(name)

@@ -17,7 +17,7 @@ _TIER1_MODULES = {
     "test_temporal", "test_sharded_pallas", "test_geometry",
     "test_scenarios", "test_xblock", "test_rule_conformance",
     "test_overlap", "test_checkpoint", "test_faults", "test_serve",
-    "test_observables", "test_telemetry",
+    "test_observables", "test_telemetry", "test_slo",
 }
 
 

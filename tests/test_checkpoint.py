@@ -11,8 +11,9 @@ import pytest
 from repro.checkpoint import (CheckpointError, CheckpointExistsError,
                               CheckpointManager, ChecksumError,
                               LeafMismatchError, ManifestError,
-                              latest_step, latest_valid_step, load_meta,
-                              restore, save, verify_checkpoint)
+                              latest_step, latest_valid_step, load_leaf,
+                              load_meta, restore, save,
+                              verify_checkpoint)
 from repro.checkpoint import store
 
 
@@ -214,3 +215,41 @@ def test_manager_retention_gc(tmp_path):
         m.save_async(s, _tree(seed=s))
     m.close()
     assert store._steps(d) == [4, 5]
+
+
+def test_load_leaf_roundtrip_and_errors(tmp_path):
+    """Single-leaf load by flattened key (the parked-lattice path):
+    crc32-verified, typed errors for a missing key and a corrupt file."""
+    d = str(tmp_path)
+    tree = _tree(seed=3)
+    save(d, 1, tree)
+    got = load_leaf(d, 1, "b/c")
+    assert np.array_equal(got, np.asarray(tree["b"]["c"]))
+    with pytest.raises(LeafMismatchError):
+        load_leaf(d, 1, "b/missing")
+    # Corrupt the leaf on disk: checked load raises, unchecked returns.
+    path = store.step_dir(d, 1)
+    fname = store._load_manifest(path)["leaves"]["b/c"]["file"]
+    arr = np.load(os.path.join(path, fname))
+    arr.flat[0] += 1
+    np.save(os.path.join(path, fname), arr)
+    with pytest.raises(ChecksumError):
+        load_leaf(d, 1, "b/c")
+    load_leaf(d, 1, "b/c", check=False)
+
+
+def test_restore_strict_subset(tmp_path):
+    """strict=False restores a subset of a checkpoint carrying extra
+    leaves (parked lattices); strict=True still refuses the count
+    mismatch, and a missing *target* leaf stays an error either way."""
+    d = str(tmp_path)
+    tree = _tree(seed=4)
+    extra = dict(tree, parked={"7": np.arange(6, dtype=np.uint32)})
+    save(d, 1, extra)
+    with pytest.raises(LeafMismatchError):
+        restore(d, 1, _tree(seed=0))            # strict: 3 leaves vs 4
+    got = restore(d, 1, _tree(seed=0), strict=False)
+    _assert_tree_equal(got, tree)
+    bad = dict(_tree(seed=0), zzz=np.zeros(2, np.int32))
+    with pytest.raises(LeafMismatchError):
+        restore(d, 1, bad, strict=False)        # target leaf absent

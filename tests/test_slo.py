@@ -1,0 +1,453 @@
+"""SLO-driven admission control, multi-tenant fairness, preemption, and
+overload degradation for the CA serve engine.
+
+The contracts under test (PR 10's acceptance bar):
+
+* every refusal is *typed* (``RateLimited`` / ``QueueFull`` /
+  ``DeadlineInfeasible`` / ``UnknownTenant``) with a ``retry_after_s``
+  hint and a logged record -- never a silent unbounded queue;
+* deficit-round-robin + priority classes + the aging guard mean no
+  tenant starves under a seeded adversarial submission storm;
+* preemption parks a lane bit-exactly at an audited boundary: a
+  preempted-then-resumed BML job (RNG-free, parity-preserving depth)
+  finishes bit-identical to an *unpreempted* run, and an RNG-rule job
+  bit-identical to its segmented solo reference;
+* degradation is graceful and accounted: unmeetable deadlines shed with
+  typed records, frame/checkpoint cadence stretched (counted) when the
+  round budget is breached, stragglers detected from round wall-clock;
+* ``drain`` can no longer lie: hitting the round cap with live work
+  raises ``DrainTimeout`` carrying the stuck rids and queue depth;
+* lifetime ``stats`` counters survive process death via checkpoint meta.
+"""
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import rulespec
+from repro.serve import (DONE, PARKED, QUARANTINED, SHED, CAServeEngine,
+                         DeadlineInfeasible, DrainTimeout, Fault,
+                         FaultInjector, QueueFull, RateLimited, SimJob,
+                         SimulatedCrash, TenantConfig, UnknownTenant,
+                         jain_index)
+from repro.serve.admission import (FairScheduler, RoundTimeModel,
+                                   TokenBucket)
+
+pytestmark = pytest.mark.slo
+
+H, W = 16, 128
+
+
+def _segmented_reference(eng, job):
+    """Solo replay of the job's exact execution segments: each segment
+    re-runs ``n`` steps at global ``t0`` (the engine's counter-based RNG
+    keys on global t, so a preempted job's stream is segment-wise)."""
+    sc = scenarios.get(job.scenario, height=eng.height, width=eng.width,
+                      **job.overrides)
+    st = sc.initial_planes()
+    for t0, n in job.segments:
+        st = rulespec.run_planes_rule(st, n, sc.rule(),
+                                      p_force=sc.p_force, t0=t0)
+    return np.asarray(st)
+
+
+# ---------------------------------------------------------------------------
+# Admission-layer units
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_fake_clock():
+    now = [0.0]
+    b = TokenBucket(rate=2.0, burst=2, clock=lambda: now[0])
+    assert b.try_take() and b.try_take() and not b.try_take()
+    assert b.retry_after_s() == pytest.approx(0.5)
+    now[0] += 0.5
+    assert b.try_take() and not b.try_take()
+    assert TokenBucket(rate=None, burst=1).try_take()  # unlimited
+
+
+def test_round_time_model_seed_then_ewma():
+    m = RoundTimeModel(modeled_s=1.0, alpha=0.5)
+    assert m.round_s() == 1.0 and m.best_case_s(3) == 3.0
+    m.observe(0.1)
+    assert m.round_s() == pytest.approx(0.1)   # measurement replaces seed
+    m.observe(0.3)
+    assert m.round_s() == pytest.approx(0.2)
+
+
+def test_jain_index():
+    assert jain_index([]) == 1.0 and jain_index([0, 0]) == 1.0
+    assert jain_index([5, 5, 5]) == pytest.approx(1.0)
+    assert jain_index([1, 0, 0, 0]) == pytest.approx(0.25)
+
+
+def test_drr_order_work_proportional():
+    """Two equal-weight tenants, one with triple-cost jobs: DRR order
+    must interleave by *work*, not job count -- after any prefix the
+    admitted work per tenant stays within one quantum."""
+    sched = FairScheduler({"a": TenantConfig("a"), "b": TenantConfig("b")})
+    cost = {}
+    for i in range(6):
+        sched.enqueue("a", i)
+        cost[i] = 3.0
+    for i in range(6, 12):
+        sched.enqueue("b", i)
+        cost[i] = 1.0
+    order = sched.order(lambda r: cost[r])
+    assert sorted(order) == list(range(12))
+    # b's six cheap jobs must not all trail a's six expensive ones.
+    b_positions = [order.index(i) for i in range(6, 12)]
+    assert min(b_positions) < 4, order
+
+
+def test_priority_class_precedes_drr_and_aging_overrides():
+    sched = FairScheduler({"hi": TenantConfig("hi", priority=2),
+                           "lo": TenantConfig("lo", priority=1)})
+    sched.enqueue("lo", 0)
+    sched.enqueue("hi", 1)
+    assert sched.order(lambda r: 1.0) == [1, 0]
+    sched.enqueue("lo", 0)
+    sched.enqueue("hi", 1)
+    # An aged low-class rid jumps the whole order.
+    assert sched.order(lambda r: 1.0, aged=[0]) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Typed backpressure through the engine
+# ---------------------------------------------------------------------------
+
+def test_rate_limit_typed_and_logged():
+    t = {"b": TenantConfig("b", rate=0.001, burst=2)}
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2, tenants=t)
+    for rid in range(2):
+        eng.submit(SimJob(rid=rid, scenario="cylinder", steps=4,
+                          tenant="b", overrides={"seed": rid}))
+    with pytest.raises(RateLimited) as ei:
+        eng.submit(SimJob(rid=2, scenario="cylinder", steps=4,
+                          tenant="b"))
+    assert ei.value.retry_after_s > 0
+    assert ei.value.to_record()["reason"] == "RateLimited"
+    assert eng.stats["rejected"] == 1
+    assert eng.rejections[0]["reason"] == "RateLimited"
+    assert 2 not in eng.jobs                   # refused jobs leave no trace
+
+
+def test_queue_bound_typed():
+    t = {"b": TenantConfig("b", queue_limit=2)}
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2, tenants=t)
+    for rid in range(2):
+        eng.submit(SimJob(rid=rid, scenario="cylinder", steps=4,
+                          tenant="b", overrides={"seed": rid}))
+    with pytest.raises(QueueFull) as ei:
+        eng.submit(SimJob(rid=2, scenario="cylinder", steps=4,
+                          tenant="b"))
+    assert ei.value.retry_after_s > 0
+    assert len(eng.sched) == 2
+
+
+def test_infeasible_deadline_refused_at_submit():
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2)
+    with pytest.raises(DeadlineInfeasible) as ei:
+        eng.submit(SimJob(rid=0, scenario="cylinder", steps=4,
+                          deadline_s=0.0))
+    assert ei.value.needed_s > 0 and ei.value.retry_after_s == 0.0
+    assert 0 not in eng.jobs
+
+
+def test_unknown_tenant_rejected_in_strict_mode():
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2,
+                        tenants={"a": TenantConfig("a")})
+    with pytest.raises(UnknownTenant):
+        eng.submit(SimJob(rid=0, scenario="cylinder", steps=4,
+                          tenant="nobody"))
+    # Permissive (no explicit tenants): any tenant auto-registers.
+    eng2 = CAServeEngine(height=H, width=W, slots=1, depth=2)
+    eng2.submit(SimJob(rid=0, scenario="cylinder", steps=4,
+                       tenant="walk-in"))
+    assert eng2.jobs[0].tenant == "walk-in"
+
+
+def test_queued_job_with_blown_deadline_shed_typed():
+    """A 2ms deadline queued behind a busy lane is provably lost after
+    the first (compile-dominated) round: shed with a typed record, and
+    the lane-holding job unaffected."""
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2)
+    eng.submit(SimJob(rid=0, scenario="cylinder", steps=8,
+                      overrides={"seed": 0}))
+    eng.submit(SimJob(rid=1, scenario="cylinder", steps=8,
+                      deadline_s=2e-3, overrides={"seed": 1}))
+    done = eng.drain()
+    assert eng.jobs[1].status == SHED
+    assert eng.shed_log == [{"rid": 1, "tenant": "default",
+                             "reason": "deadline_unmeetable",
+                             "round": eng.shed_log[0]["round"]}]
+    assert [j.rid for j in done] == [0]
+    assert eng.metrics()["slo"]["tenants"]["default"]["shed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Preemption: bit-exact park/resume
+# ---------------------------------------------------------------------------
+
+def test_preempted_bml_job_bit_identical_to_unpreempted_run():
+    """The satellite acceptance test: gold preempts the bronze BML lane
+    at an audited boundary; bronze resumes later and finishes
+    bit-identical to a run that was never preempted (BML is RNG-free and
+    depth=2 preserves the t parity its update rule depends on)."""
+    tenants = {"gold": TenantConfig("gold", priority=2),
+               "bronze": TenantConfig("bronze", priority=1)}
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2,
+                        tenants=tenants)
+    eng.submit(SimJob(rid=0, scenario="bml_city", steps=12,
+                      tenant="bronze", overrides={"seed": 0}))
+    eng.tick()
+    eng.submit(SimJob(rid=1, scenario="bml_city", steps=4, tenant="gold",
+                      overrides={"seed": 1}))
+    eng.tick()
+    assert eng.jobs[0].status == PARKED
+    assert eng.jobs[0].preemptions == 1
+    done = eng.drain()
+    assert {j.rid for j in done} == {0, 1}
+    assert len(eng.jobs[0].segments) == 2      # parked once, resumed once
+    assert eng.stats["preemptions"] == 1 and eng.stats["resumed"] == 1
+
+    ref = CAServeEngine(height=H, width=W, slots=1, depth=2)
+    ref.submit(SimJob(rid=0, scenario="bml_city", steps=12,
+                      overrides={"seed": 0}))
+    ref_res = ref.drain()[0].result
+    assert np.array_equal(eng.jobs[0].result, ref_res)
+
+
+def test_preempted_rng_rule_job_bit_exact_segmented():
+    """An RNG rule (cylinder/fhp2, forced) preempted mid-run: the resumed
+    job's RNG stream is segment-wise in global t, and the final lattice
+    equals the segmented solo replay exactly."""
+    tenants = {"gold": TenantConfig("gold", priority=2),
+               "bronze": TenantConfig("bronze", priority=1)}
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2,
+                        tenants=tenants)
+    eng.submit(SimJob(rid=0, scenario="cylinder", steps=12,
+                      tenant="bronze", overrides={"seed": 0}))
+    eng.tick()
+    eng.submit(SimJob(rid=1, scenario="cylinder", steps=4, tenant="gold",
+                      overrides={"seed": 1}))
+    done = eng.drain()
+    assert eng.stats["preemptions"] == 1
+    for job in done:
+        assert np.array_equal(job.result, _segmented_reference(eng, job)), \
+            (job.rid, job.segments)
+
+
+def test_preemption_bounded_and_audited():
+    """``max_preemptions`` caps how often one victim can be parked, and
+    preemption only happens on audit-certified boundaries (audit_every=2
+    means odd rounds cannot park a lane)."""
+    tenants = {"gold": TenantConfig("gold", priority=2),
+               "bronze": TenantConfig("bronze", priority=1)}
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2,
+                        audit_every=2, tenants=tenants,
+                        max_preemptions=1)
+    eng.submit(SimJob(rid=0, scenario="cylinder", steps=16,
+                      tenant="bronze", overrides={"seed": 0}))
+    eng.tick()                     # round 1: odd -- no preemption allowed
+    eng.submit(SimJob(rid=1, scenario="cylinder", steps=4, tenant="gold",
+                      overrides={"seed": 1}))
+    eng.tick()
+    assert eng.jobs[0].status == "running"     # round 1 boundary: unaudited
+    eng.tick()                                 # round 2 boundary: parked
+    assert eng.jobs[0].status == PARKED
+    eng.submit(SimJob(rid=2, scenario="cylinder", steps=4, tenant="gold",
+                      overrides={"seed": 2}))
+    done = eng.drain()
+    # The bronze job was preempted exactly once (its budget), and every
+    # completion is still bit-exact against its segmented reference.
+    assert eng.jobs[0].preemptions == 1
+    assert {j.rid for j in done} == {0, 1, 2}
+    for job in done:
+        assert np.array_equal(job.result, _segmented_reference(eng, job))
+
+
+# ---------------------------------------------------------------------------
+# The property test: adversarial storm, nobody starves
+# ---------------------------------------------------------------------------
+
+def test_no_tenant_starves_under_adversarial_storm():
+    """Seeded adversarial submission storm over three tenants (a
+    high-priority flood, a heavy-job class, a small bounded class): the
+    aging guard + DRR must give every tenant completions; every
+    completion is bit-exact vs its segmented solo reference; and the
+    weighted Jain index stays above threshold."""
+    rng = np.random.default_rng(42)
+    tenants = {"gold": TenantConfig("gold", priority=2, weight=2.0),
+               "silver": TenantConfig("silver", priority=1, weight=2.0),
+               "bronze": TenantConfig("bronze", priority=1, weight=1.0,
+                                      queue_limit=4)}
+    eng = CAServeEngine(height=H, width=W, slots=2, depth=2,
+                        tenants=tenants, starvation_rounds=4)
+    admitted = {n: 0 for n in tenants}
+    rejected = 0
+    names = list(tenants)
+    for rid in range(15):
+        tenant = names[int(rng.integers(3))]
+        steps = int(2 * (1 + rng.integers(4)))   # 2..8 steps, even
+        try:
+            eng.submit(SimJob(rid=rid, scenario="cylinder", steps=steps,
+                              tenant=tenant, overrides={"seed": rid}))
+            admitted[tenant] += 1
+        except QueueFull:
+            rejected += 1
+    assert sum(admitted.values()) + rejected == 15
+    done = eng.drain(max_rounds=400)
+
+    slo = eng.slo_report()
+    for name, n in admitted.items():
+        if n:
+            assert slo["tenants"][name]["done"] == n, \
+                (name, slo["tenants"][name])   # nobody starves: all finish
+    assert len(done) == sum(admitted.values())
+    for job in done:
+        assert np.array_equal(job.result, _segmented_reference(eng, job)), \
+            (job.rid, job.segments)
+    assert slo["jain_fairness"] >= 0.4, slo
+    # Every refusal along the way was typed and logged.
+    assert eng.stats["rejected"] == rejected
+    assert all(r["reason"] == "QueueFull" for r in eng.rejections)
+
+
+def test_burst_storm_fault_exercises_backpressure():
+    """The ``burst_storm`` fault submits through the public admission
+    path: with a tight queue bound the storm is partially rejected --
+    every rejection typed -- and the engine still completes everything
+    it admitted."""
+    inj = FaultInjector([Fault(kind="burst_storm", round=1, jobs=6,
+                               tenant="storm", seed=7)])
+    tenants = {"storm": TenantConfig("storm", queue_limit=2),
+               "default": TenantConfig("default")}
+    eng = CAServeEngine(height=H, width=W, slots=2, depth=2,
+                        tenants=tenants, injector=inj)
+    eng.submit(SimJob(rid=0, scenario="cylinder", steps=8,
+                      overrides={"seed": 0}))
+    done = eng.drain(max_rounds=200)
+    assert eng.stats["storm_submitted"] + eng.stats["storm_rejected"] == 6
+    assert eng.stats["storm_rejected"] >= 1
+    assert all(r["reason"] for r in eng.rejections)
+    assert len(done) == 1 + eng.stats["storm_submitted"]
+
+
+def test_poison_pill_quarantines_target_only():
+    """A poison pill re-corrupts its rid on every live round: the target
+    is quarantined after bounded retries while co-batched jobs finish
+    bit-exact."""
+    inj = FaultInjector([Fault(kind="poison_pill", round=1, rid=0,
+                               sticky=True, seed=9)])
+    eng = CAServeEngine(height=H, width=W, slots=2, depth=2,
+                        max_retries=1, injector=inj)
+    for rid in range(2):
+        eng.submit(SimJob(rid=rid, scenario="cylinder", steps=8,
+                          overrides={"seed": rid}))
+    done = eng.drain(max_rounds=200)
+    assert eng.jobs[0].status == QUARANTINED
+    assert {j.rid for j in done} == {1}
+    assert np.array_equal(done[0].result,
+                          _segmented_reference(eng, done[0]))
+
+
+# ---------------------------------------------------------------------------
+# Degradation and accounting
+# ---------------------------------------------------------------------------
+
+def test_overload_stretches_frames_and_checkpoints(tmp_path):
+    """An impossible round budget keeps the engine in the degradation
+    window: odd-round frames deferred (counted) and checkpoint cadence
+    doubled (stretched writes counted) -- jobs still finish."""
+    eng = CAServeEngine(height=H, width=W, slots=2, depth=2,
+                        ckpt_dir=str(tmp_path), ckpt_every=2,
+                        round_budget_s=1e-9)
+    eng.submit(SimJob(rid=0, scenario="cylinder", steps=12, frame_every=2,
+                      overrides={"seed": 0}))
+    done = eng.drain()
+    assert len(done) == 1
+    assert eng.stats["overloaded_rounds"] >= 1
+    assert eng.stats["frames_deferred"] >= 1
+    assert eng.stats["ckpts_stretched"] >= 1
+    # Unstretched the job would stream a frame every round.
+    assert len(eng.frame_log) < 6
+
+
+def test_straggler_round_detected():
+    """A slow-exchange hop far above the rolling median round wall is
+    counted as a straggler."""
+    inj = FaultInjector([Fault(kind="slow_exchange", round=8,
+                               delay_s=0.25, seed=3)])
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2, injector=inj)
+    eng.submit(SimJob(rid=0, scenario="cylinder", steps=20,
+                      overrides={"seed": 0}))
+    eng.drain()
+    assert eng.stats["stragglers_detected"] >= 1
+
+
+def test_drain_timeout_typed_with_stuck_rids():
+    eng = CAServeEngine(height=H, width=W, slots=1, depth=2)
+    for rid in range(2):
+        eng.submit(SimJob(rid=rid, scenario="cylinder", steps=8,
+                          overrides={"seed": rid}))
+    with pytest.raises(DrainTimeout) as ei:
+        eng.drain(max_rounds=2)
+    assert ei.value.rids == [0, 1]
+    assert ei.value.queue_depth == 1           # rid 1 still queued
+    assert "2 live job(s)" in str(ei.value)
+    # The engine is not wedged: a later drain completes the work.
+    done = eng.drain()
+    assert {j.rid for j in done} == {0, 1}
+
+
+def test_lifetime_stats_survive_crash_resume(tmp_path):
+    """Satellite: cumulative stats (rollbacks, audit counts, jobs_done)
+    ride in checkpoint meta, so a resumed engine reports lifetime totals
+    instead of resetting to zero."""
+    d = str(tmp_path)
+    inj = FaultInjector([
+        Fault(kind="bitflip", round=2, rule="fhp2", lane=0, plane=1,
+              bits=1, seed=5),
+        Fault(kind="killed_step", round=5, seed=6),
+    ])
+    eng = CAServeEngine(height=H, width=W, slots=2, depth=2, ckpt_dir=d,
+                        ckpt_every=2, injector=inj)
+    for rid in range(2):
+        eng.submit(SimJob(rid=rid, scenario="cylinder", steps=12,
+                          overrides={"seed": rid}))
+    with pytest.raises(SimulatedCrash):
+        eng.drain()
+    assert eng.stats["rollbacks"] == 1
+
+    eng2 = CAServeEngine.resume(d, ckpt_every=2)
+    # The pre-crash rollback and audit history is already on the books.
+    assert eng2.stats["rollbacks"] == 1
+    assert eng2.stats["audit_failures"] == 1
+    assert eng2.stats["rounds"] >= 4
+    done = eng2.drain()
+    assert {j.rid for j in done} == {0, 1}
+    assert eng2.stats["jobs_done"] == 2
+
+
+def test_metrics_slo_block_shape():
+    tenants = {"gold": TenantConfig("gold", priority=2, weight=2.0),
+               "bronze": TenantConfig("bronze", priority=1)}
+    eng = CAServeEngine(height=H, width=W, slots=2, depth=2,
+                        tenants=tenants)
+    eng.submit(SimJob(rid=0, scenario="cylinder", steps=4, frame_every=2,
+                      tenant="gold", overrides={"seed": 0}))
+    eng.submit(SimJob(rid=1, scenario="cylinder", steps=4, tenant="bronze",
+                      overrides={"seed": 1}))
+    eng.drain()
+    m = eng.metrics()
+    slo = m["slo"]
+    assert set(slo["tenants"]) == {"gold", "bronze"}
+    for d in slo["tenants"].values():
+        for k in ("submitted", "done", "shed", "rejected",
+                  "work_done_steps", "deadline_miss",
+                  "frame_slo_violations", "preemptions"):
+            assert k in d
+    assert 0.0 < slo["jain_fairness"] <= 1.0
+    assert slo["round_s_measured_n"] == eng.stats["rounds"]
+    for k in ("rejected", "shed", "preemptions", "deadline_miss",
+              "stragglers_detected", "overloaded_rounds"):
+        assert k in m
